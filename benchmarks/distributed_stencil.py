@@ -1,0 +1,78 @@
+"""Beyond-paper benchmark: the distributed stencil runtime (shard_map
+domain decomposition + ppermute halo exchange) on 8 simulated host devices.
+
+Runs in a subprocess (the main process must keep 1 device per the dry-run
+contract).  Validates bitwise-vs-single-device numerics and reports wall
+time with/without interior/boundary overlap decomposition.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+import time
+from typing import Dict, List
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+
+_CODE = """
+import time
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import acoustic, dsl as st
+
+mesh = jax.make_mesh({mesh_shape}, {axis_names})
+t0 = time.perf_counter()
+backend = st.distributed(grid_axes={grid_axes}, overlap={overlap})
+p, prof = acoustic.run(shape={shape}, iters={iters}, backend=backend,
+                       mesh=mesh)
+wall = time.perf_counter() - t0
+ref, _ = acoustic.run(shape={shape}, iters={iters}, backend=st.xla())
+err = float(jnp.max(jnp.abs(p.interior - ref.interior)))
+assert err < 1e-4, err
+print(f"RESULT {{wall:.3f}} {{err:.2e}}")
+"""
+
+
+def run(fast: bool = False, verbose: bool = True) -> List[Dict]:
+    shape = (32, 32, 64) if fast else (64, 64, 64)
+    iters = 2 if fast else 4
+    cases = [
+        ("1d_overlap", (8,), ("data",), ("data", None, None), True),
+        ("1d_no_overlap", (8,), ("data",), ("data", None, None), False),
+        ("2d_overlap", (4, 2), ("data", "model"),
+         ("data", "model", None), True),
+        ("3d_pod", (2, 2, 2), ("pod", "data", "model"),
+         ("pod", "data", "model"), True),
+    ]
+    rows = []
+    for name, mesh_shape, axis_names, grid_axes, overlap in cases:
+        code = _CODE.format(mesh_shape=mesh_shape, axis_names=axis_names,
+                            grid_axes=grid_axes, overlap=overlap,
+                            shape=shape, iters=iters)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = _SRC
+        t0 = time.perf_counter()
+        r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                           capture_output=True, text=True, env=env,
+                           timeout=900)
+        assert r.returncode == 0, f"{name}:\n{r.stdout}\n{r.stderr}"
+        line = [l for l in r.stdout.splitlines() if l.startswith("RESULT")][0]
+        wall, err = line.split()[1:]
+        rows.append({"name": name, "seconds": float(wall),
+                     "max_err_vs_single": float(err)})
+        if verbose:
+            print(f"{name:16s} wall={wall}s err={err} "
+                  f"(subprocess total {time.perf_counter() - t0:.1f}s)",
+                  flush=True)
+    return rows
+
+
+def main():
+    return run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Benchmark aggregator: one module per paper table + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits a section per table; each section also prints ``name,value`` CSV
+lines for machine consumption.  The dry-run/roofline section reads the
+baseline artifact JSON if present (produced by repro.launch.dryrun — a
+separate process because it needs 512 placeholder devices).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _hdr(title):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sweeps (CI mode)")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+
+    _hdr("Accuracy suite (paper Table 4 / §6.1)")
+    from benchmarks import accuracy_suite
+    kernels = ("star2d2r", "star3d4r", "box2d1r", "box3d2r", "j2d5pt",
+               "j3d27pt") if args.fast else None
+    acc = accuracy_suite.run(kernels=kernels)
+    print(f"csv,accuracy_versions,{len(acc)}")
+    print(f"csv,accuracy_worst_max_err,{max(r['max_err'] for r in acc):.3e}")
+    print(f"csv,accuracy_worst_rmsd,{max(r['rmsd'] for r in acc):.3e}")
+
+    _hdr("Template timing (paper Tables 6-8 / §6.2)")
+    from benchmarks import template_timing
+    tt = template_timing.run(
+        shape=(16, 16, 128) if args.fast else (32, 32, 128),
+        iters=1 if args.fast else 2,
+        include_pallas=not args.fast)
+    for r in tt:
+        print(f"csv,tts_{r['template']}_{r['mem']},"
+              f"{r['time_to_solution']:.3f}")
+
+    _hdr("Productivity (paper Table 11 / §6.3)")
+    from benchmarks import productivity
+    pr = productivity.run()
+    print(f"csv,productivity_min_leverage,"
+          f"{min(r['leverage'] for r in pr)}")
+
+    _hdr("Distributed stencil (beyond-paper: halo-exchange runtime)")
+    from benchmarks import distributed_stencil
+    ds = distributed_stencil.run(fast=args.fast)
+    for r in ds:
+        print(f"csv,dist_{r['name']},{r['seconds']:.3f}")
+
+    _hdr("Stencil-template roofline (BlockSpec traffic model, §Perf)")
+    from benchmarks import stencil_roofline
+    sr = stencil_roofline.run()
+    best = max((r for r in sr if r["vmem_ok"]),
+               key=lambda r: r["roofline_frac"])
+    print(f"csv,stencil_best_bpp,{best['bytes_per_point']}")
+    print(f"csv,stencil_best_roofline_frac,{best['roofline_frac']}")
+
+    _hdr("Roofline (from dry-run artifacts; see EXPERIMENTS.md §Roofline)")
+    from benchmarks import roofline
+    rl = roofline.main()
+    if rl:
+        fracs = [r["roofline_frac"] for r in rl if r["roofline_frac"]]
+        if fracs:
+            print(f"csv,roofline_cells,{len(rl)}")
+            print(f"csv,roofline_best_frac,{max(fracs):.3f}")
+            print(f"csv,roofline_worst_frac,{min(fracs):.3f}")
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

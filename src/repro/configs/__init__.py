@@ -1,0 +1,21 @@
+"""Architecture registry: one module per assigned architecture (+ shapes).
+
+``repro.configs.get("mixtral-8x7b")`` → ModelConfig;
+``repro.configs.shapes.SHAPES`` → the assigned input shapes.
+"""
+from .base import ModelConfig, MoEConfig, get, names, register, tiny  # noqa: F401
+
+# one module per assigned architecture — importing registers the config
+from . import (  # noqa: F401
+    mixtral_8x7b, mixtral_8x22b, granite_8b, gemma_7b, phi3_mini,
+    nemotron_4_15b, recurrentgemma_9b, xlstm_1_3b, pixtral_12b,
+    whisper_small,
+)
+from . import shapes  # noqa: F401
+from .shapes import SHAPES, applicable, input_specs  # noqa: F401
+
+ARCH_NAMES = (
+    "mixtral-8x7b", "mixtral-8x22b", "granite-8b", "gemma-7b",
+    "phi3-mini-3.8b", "nemotron-4-15b", "recurrentgemma-9b", "xlstm-1.3b",
+    "pixtral-12b", "whisper-small",
+)

@@ -1,0 +1,135 @@
+"""Assigned input shapes × architecture → abstract input specs.
+
+Every (arch × shape) cell of the assignment is made concrete here:
+
+  train_4k      seq_len=4096    global_batch=256   (training step)
+  prefill_32k   seq_len=32768   global_batch=32    (inference prefill)
+  decode_32k    seq_len=32768   global_batch=128   (one-token decode, KV
+                                                    cache of seq_len)
+  long_500k     seq_len=524288  global_batch=1     (long-context decode;
+                                                    sub-quadratic archs only)
+
+``input_specs(cfg, shape)`` returns ``jax.ShapeDtypeStruct`` stand-ins for
+every model input — weak-type-correct, shardable, no device allocation —
+exactly what ``launch/dryrun.py`` lowers against.
+
+Modality frontends are stubs per the assignment: ``[vlm]`` cells provide
+precomputed patch embeddings, ``[audio]`` cells precomputed frame
+embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+
+__all__ = ["ShapeSpec", "SHAPES", "applicable", "input_specs",
+           "batch_dims", "make_host_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str                 # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def _subquadratic(cfg: ModelConfig) -> bool:
+    """Archs with O(window)/O(1) decode state: SSM, hybrid, or SWA."""
+    return cfg.family in ("ssm", "hybrid") or bool(cfg.window)
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """(runs?, reason-if-skip).  Skips follow DESIGN.md §Arch-applicability:
+    ``long_500k`` needs sub-quadratic attention; pure full-attention archs
+    skip it.  (No encoder-only archs are assigned, so decode shapes run
+    everywhere else.)"""
+    if shape.name == "long_500k" and not _subquadratic(cfg):
+        return False, ("pure full-attention arch: 500k-context decode has "
+                       "no sub-quadratic structure (documented skip)")
+    return True, ""
+
+
+def _embed_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict:
+    """Abstract inputs for the step function of this cell.
+
+    train   → the loss batch {tokens, labels, [patch_embeds|frame_embeds]}
+    prefill → {tokens, [patch_embeds|frame_embeds]}
+    decode  → {tokens [B,1], cache}
+    """
+    from repro.models import api  # local import to avoid cycles
+
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = _embed_dtype(cfg)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            # enc-dec split: enc_frames = dec_tokens = S/2 (DESIGN.md §5)
+            T = S // 2
+            specs = {"frame_embeds": jax.ShapeDtypeStruct((B, T, cfg.d_model), dt),
+                     "tokens": jax.ShapeDtypeStruct((B, T), i32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+            return specs
+        if cfg.family == "vlm":
+            P = cfg.n_prefix_tokens
+            St = S - P
+            specs = {"patch_embeds": jax.ShapeDtypeStruct((B, P, cfg.d_model), dt),
+                     "tokens": jax.ShapeDtypeStruct((B, St), i32)}
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, St), i32)
+            return specs
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+
+    # decode: one new token against a cache of context S
+    cache_len = api.decode_cache_len(cfg, S)
+    kw = {}
+    if cfg.family == "audio":
+        kw["enc_len"] = 1500  # fixed whisper encoder output length
+    cache = api.cache_spec(cfg, B, cache_len, **kw)
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32), "cache": cache}
+
+
+def batch_dims(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, int]:
+    """Leading batch dim of every input-spec leaf group (for sharding)."""
+    return {"tokens": 0, "labels": 0, "patch_embeds": 0, "frame_embeds": 0}
+
+
+def make_host_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Concrete (small!) host arrays matching ``input_specs`` — only for
+    reduced smoke configs; never call on full configs."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in input_specs(cfg, shape).items():
+        if name == "cache":
+            from repro.models import api
+            cache_len = api.decode_cache_len(cfg, shape.seq_len)
+            kw = {"enc_len": 1500} if cfg.family == "audio" else {}
+            out[name] = api.init_cache(cfg, shape.global_batch, cache_len, **kw)
+        elif spec.dtype == jnp.int32:
+            out[name] = rng.integers(0, cfg.vocab, spec.shape).astype(np.int32)
+        else:
+            out[name] = rng.standard_normal(spec.shape).astype(np.float32)
+    return out

@@ -1,0 +1,95 @@
+"""Auto-tuner over backend templates and their knobs (paper §7 lists this
+as future work — implemented here as grid search with measured
+time-to-solution, the paper's own metric).
+
+    from repro.core import autotune, dsl as st
+    best = autotune.tune(kernel, grids, iters=3)
+    st.launch(backend=best.backend)(target)(...)
+
+The search space mirrors Table 6's configuration column: template ×
+block (Dx/Dy/Dz) × mem_type × prefetch.  Results are cached per
+(kernel, interior shape, dtype) so repeated launches pay once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import dsl as st
+
+_CACHE: Dict = {}
+
+
+@dataclasses.dataclass
+class TuneResult:
+    backend: st.Backend
+    seconds: float
+    trials: List[Tuple[st.Backend, float]]
+
+
+def default_space(ndim: int, interior: Sequence[int]) -> List[st.Backend]:
+    """Candidate backends (pruned to blocks that fit the domain)."""
+    if ndim == 3:
+        blocks = [(8, 8, 128), (8, 16, 128), (16, 8, 128), (8, 8, 256)]
+        sblocks = [(16, 8, 128), (32, 8, 128)]
+    else:
+        blocks = [(8, 128), (16, 128), (8, 256)]
+        sblocks = [(16, 128), (32, 128)]
+    out: List[st.Backend] = [st.xla()]
+    for t in ("gmem", "smem", "f4"):
+        for b in blocks:
+            out.append(st.pallas(template=t, block=b))
+    for t in ("shift", "unroll", "semi"):
+        for b, m in itertools.product(sblocks, ("registers", "vmem")):
+            if t == "semi" and m == "registers":
+                continue
+            out.append(st.pallas(template=t, block=b, mem_type=m))
+    return out
+
+
+def _measure(kernel: st.Kernel, grids: Dict[str, st.grid], backend,
+             iters: int) -> float:
+    """Median wall time of ``iters`` kernel applications (excludes the
+    one-time codegen+compile warmup, like the paper's Kernel column)."""
+    gs = {n: g.copy() for n, g in grids.items()}
+
+    @st.target
+    def tgt(*args):
+        st.map(e=args[0].shape)(kernel)(*args)
+
+    run = st.launch(backend=backend)
+    args = tuple(gs.values())
+    try:
+        run(tgt)(*args)                      # warmup: codegen + compile
+    except Exception:
+        return float("inf")
+    times = []
+    for _ in range(iters):
+        res = run(tgt)(*args)
+        times.append(res.profile.get("kernel", res.profile["total"]))
+    return float(np.median(times))
+
+
+def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
+         space: Optional[List[st.Backend]] = None,
+         verbose: bool = False) -> TuneResult:
+    g0 = next(iter(grids.values()))
+    key = (kernel.name, g0.shape, str(g0.dtype))
+    if key in _CACHE:
+        return _CACHE[key]
+    space = space or default_space(kernel.info.ndim, g0.shape)
+    trials = []
+    for backend in space:
+        dt = _measure(kernel, grids, backend, iters)
+        trials.append((backend, dt))
+        if verbose:
+            print(f"  {backend}: {dt:.4f}s", flush=True)
+    best = min(trials, key=lambda t: t[1])
+    result = TuneResult(backend=best[0], seconds=best[1], trials=trials)
+    _CACHE[key] = result
+    return result

@@ -1,0 +1,375 @@
+"""Distributed stencil runtime: shard_map domain decomposition + halo
+exchange (beyond-paper — the paper is single-node; this layer is what makes
+the technique runnable on pods).
+
+Design
+------
+* The stencil grid's axes are mapped onto mesh axes (``backend.grid_axes``,
+  e.g. ``('pod', 'data', 'model')`` splits a 3-D domain across all 512 chips
+  of the multi-pod mesh).
+* Each shard holds its local interior block.  Before applying the kernel,
+  each decomposed axis exchanges ``h``-wide edge slabs with its mesh
+  neighbors via ``lax.ppermute`` (devices at the global boundary receive
+  zeros — matching the zero-filled grid halo).
+* ``overlap=True`` splits the local update into an interior pass (which
+  does *not* depend on the exchanged halos) and boundary-strip passes
+  (which do).  XLA's latency-hiding scheduler can then overlap the
+  ppermute transfers with the interior compute — the stencil analogue of
+  the compute/comm overlap used in large-scale LM training.
+* The per-shard compute reuses the single-device lowerings (XLA or Pallas),
+  so ``distributed(inner=pallas(...))`` composes the paper's templates with
+  the pod-level decomposition.
+
+Halo traffic per step per shard is ``h · (local surface)`` — the classic
+reason stencils scale to thousands of nodes: the collective term shrinks
+relative to compute as local volume grows.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from . import analysis, ir, lowering
+
+
+def _halo_exchange(local: jnp.ndarray, axis: int, mesh_axis: str,
+                   h: int, mesh: Mesh) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (left_halo, right_halo) slabs of width ``h`` for ``local``,
+    fetched from mesh neighbors along ``mesh_axis`` (zeros at the ends)."""
+    k = mesh.shape[mesh_axis]
+    ndim = local.ndim
+
+    def edge(lo, hi):
+        idx = tuple(slice(lo, hi) if a == axis else slice(None)
+                    for a in range(ndim))
+        return local[idx]
+
+    if k == 1:
+        zero = jnp.zeros_like(edge(0, h))
+        return zero, zero
+    # my right edge → right neighbor's left halo
+    left_halo = lax.ppermute(edge(local.shape[axis] - h, local.shape[axis]),
+                             mesh_axis, [(i, i + 1) for i in range(k - 1)])
+    # my left edge → left neighbor's right halo
+    right_halo = lax.ppermute(edge(0, h), mesh_axis,
+                              [(i + 1, i) for i in range(k - 1)])
+    return left_halo, right_halo
+
+
+def lower_distributed(kernel: ir.StencilIR,
+                      halos: Mapping[str, Tuple[int, ...]],
+                      interior_shape: Tuple[int, ...],
+                      region,
+                      backend,
+                      mesh: Optional[Mesh]):
+    """Build ``fn(arrays, scalars) -> arrays`` running the kernel
+    domain-decomposed over ``mesh``.
+
+    Constraints: ``region`` must be None (whole-domain; use coefficient
+    masks for PML in the distributed path — see regions.py) and global
+    grid halos are treated as zero.
+    """
+    if mesh is None:
+        raise ValueError("distributed backend requires launch(mesh=...)")
+    if region is not None:
+        raise ValueError("distributed backend updates the whole domain; "
+                         "express PML via coefficient masks (regions.py)")
+    info = analysis.analyze(kernel)
+    ndim = kernel.ndim
+    grid_axes = tuple(backend.grid_axes)
+    if len(grid_axes) != ndim:
+        raise ValueError(f"grid_axes must have {ndim} entries")
+    for ax, m in enumerate(grid_axes):
+        if m is None:
+            continue
+        if interior_shape[ax] % mesh.shape[m]:
+            raise ValueError(
+                f"domain axis {ax} ({interior_shape[ax]}) not divisible by "
+                f"mesh axis '{m}' ({mesh.shape[m]})")
+
+    local_shape = tuple(
+        s // (mesh.shape[m] if m else 1)
+        for s, m in zip(interior_shape, grid_axes))
+
+    in_grids = info.input_grids
+    out_grids = info.output_grids
+    all_grids = tuple(kernel.grid_params)
+    gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in all_grids}
+    kernel_halos = {g: gh[g] for g in all_grids}
+
+    if getattr(backend, "time_steps", 1) > 1:
+        return _lower_time_skewed(kernel, info, interior_shape, backend,
+                                  mesh, grid_axes, local_shape, gh)
+
+    inner = getattr(backend, "inner", None)
+    if inner is not None and inner.kind == "pallas":
+        from repro.kernels.stencil import codegen as _codegen
+
+        def make_inner(reg):
+            return _codegen.lower_pallas(kernel, kernel_halos, local_shape,
+                                         reg, inner)
+    else:
+        def make_inner(reg):
+            return lowering.lower_jax(kernel, kernel_halos, local_shape, reg)
+
+    inner_full = make_inner(None)
+
+    # boundary strips (per decomposed axis, both ends) for the overlap path
+    strip_regions = []
+    for ax, m in enumerate(grid_axes):
+        if m is None:
+            continue
+        h = max(gh[g][ax] for g in all_grids)
+        if h == 0:
+            continue
+        full = tuple((0, local_shape[a]) for a in range(ndim))
+        lo = tuple((0, h) if a == ax else full[a] for a in range(ndim))
+        hi = tuple((local_shape[a] - h, local_shape[a]) if a == ax else full[a]
+                   for a in range(ndim))
+        strip_regions.append(lo)
+        strip_regions.append(hi)
+    inner_strips = [make_inner(r) for r in strip_regions] if backend.overlap \
+        else []
+
+    specs = P(*grid_axes)
+
+    def pad_with_halos(local_arrays):
+        """Exchange halos and return per-grid halo-padded local arrays."""
+        padded = {}
+        for g, loc in local_arrays.items():
+            arr = loc
+            for ax in range(ndim):
+                h = gh[g][ax]
+                if h == 0:
+                    continue
+                m = grid_axes[ax]
+                if m is None:
+                    zshape = list(arr.shape)
+                    zshape[ax] = h
+                    lh = jnp.zeros(zshape, arr.dtype)
+                    rh = lh
+                else:
+                    # halo slabs are exchanged on the *unpadded* axis
+                    # extents of already-padded other axes — pad order is
+                    # axis-by-axis so earlier axes are already padded; the
+                    # exchange covers the padded extent of those axes.
+                    lh, rh = _halo_exchange(arr, ax, m, h, mesh)
+                arr = jnp.concatenate([lh, arr, rh], axis=ax)
+            padded[g] = arr
+        return padded
+
+    def interior_only_pad(local_arrays):
+        padded = {}
+        for g, loc in local_arrays.items():
+            pads = [(gh[g][ax], gh[g][ax]) for ax in range(ndim)]
+            padded[g] = jnp.pad(loc, pads)
+        return padded
+
+    def crop(arr, g):
+        idx = tuple(slice(gh[g][ax], gh[g][ax] + local_shape[ax])
+                    for ax in range(ndim))
+        return arr[idx]
+
+    def sharded_step(local_arrays: Dict[str, jnp.ndarray],
+                     scalars: Dict[str, jnp.ndarray]):
+        if backend.overlap and inner_strips:
+            # 1) interior pass on zero-halo padding — no comm dependency, so
+            #    XLA can overlap it with the ppermutes issued below.
+            pad0 = interior_only_pad(local_arrays)
+            out0 = inner_full(pad0, scalars)
+            final = {g: crop(out0[g], g) for g in out_grids}
+            # 2) exchanged halos → recompute boundary strips from the
+            #    *pristine* inputs (outputs may alias inputs via center
+            #    reads) and patch them into the interior-pass result.
+            pad1 = pad_with_halos(local_arrays)
+            for strip_fn, reg in zip(inner_strips, strip_regions):
+                sres = strip_fn(pad1, scalars)
+                for g in out_grids:
+                    loc = tuple(slice(b, e) for b, e in reg)
+                    padd = tuple(slice(gh[g][ax] + b, gh[g][ax] + e)
+                                 for ax, (b, e) in enumerate(reg))
+                    final[g] = final[g].at[loc].set(sres[g][padd])
+            return final
+        padded = pad_with_halos(local_arrays)
+        out = inner_full(padded, scalars)
+        return {g: crop(out[g], g) for g in out_grids}
+
+    shmapped = shard_map(
+        sharded_step, mesh=mesh,
+        in_specs=({g: specs for g in all_grids}, P()),
+        out_specs={g: specs for g in out_grids},
+        check_rep=False)
+
+    jitted = jax.jit(shmapped)
+
+    def fn(arrays: Dict[str, jnp.ndarray], scalars: Dict[str, jnp.ndarray]):
+        """arrays are *full* (grid-halo'd) host arrays; the grid halo is
+        assumed zero in the distributed path."""
+        interiors = {}
+        for g in all_grids:
+            o = (np.asarray(arrays[g].shape) - np.asarray(interior_shape)) // 2
+            idx = tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
+                        for ax in range(ndim))
+            interiors[g] = arrays[g][idx]
+        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+        out = jitted(interiors, scal)
+        result = dict(arrays)
+        for g in out_grids:
+            o = (np.asarray(arrays[g].shape) - np.asarray(interior_shape)) // 2
+            idx = tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
+                        for ax in range(ndim))
+            result[g] = arrays[g].at[idx].set(out[g])
+        return result
+
+    fn.jitted = jitted
+    fn.shmapped = shmapped
+    fn.mesh = mesh
+    fn.partition_spec = specs
+    fn.local_shape = local_shape
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# overlapped tiling / time skewing (paper §3) at pod level
+# ---------------------------------------------------------------------------
+def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
+                       grid_axes, local_shape, gh):
+    """k kernel applications per ONE (k·h)-wide halo exchange.
+
+    Each shard exchanges halos of width ext[g] = (k−1)·h_max + h_g, then
+    computes k steps on regions shrinking by h_max per step — the shells
+    between k·h and the interior are computed redundantly by both
+    neighbors (the classic redundant-compute/communication trade).  At
+    global boundaries the (zero) grid-halo condition is re-imposed on the
+    shells between steps so fused results match k separate exchanged
+    steps exactly (validated in tests/test_distributed.py).
+    """
+    k = backend.time_steps
+    swap = backend.swap
+    if swap is None:
+        raise ValueError("time_steps > 1 requires swap=(older, newer)")
+    ndim = kernel.ndim
+    h_max = max(info.halo) if info.halo else 0
+    if h_max == 0:
+        raise ValueError("time skewing needs a nonzero stencil halo")
+    all_grids = tuple(kernel.grid_params)
+    out_grids = info.output_grids
+    if len(out_grids) != 1 or out_grids[0] != swap[0]:
+        raise ValueError("time skewing supports single-output kernels "
+                         "writing swap[0]")
+
+    # uniform padded indexing: decomposed axes exchange (k−1)·h_max + h_g
+    # wide slabs; non-decomposed axes zero-pad the same width (the global
+    # zero grid-halo).  The swap pair must share geometry (they trade
+    # buffers between steps) → both get the full k·h_max.
+    ext = {g: tuple((k - 1) * h_max + gh[g][ax] for ax in range(ndim))
+           for g in all_grids}
+    for g in swap:
+        ext[g] = (k * h_max,) * ndim
+    for ax, m in enumerate(grid_axes):
+        if m and k * h_max > local_shape[ax]:
+            raise ValueError("k·h halo exceeds local extent; reduce "
+                             "time_steps or mesh split")
+
+    def pad_wide(local_arrays):
+        padded = {}
+        for g, arr in local_arrays.items():
+            for ax in range(ndim):
+                e = ext[g][ax]
+                if e == 0:
+                    continue
+                m = grid_axes[ax]
+                if m:
+                    lh, rh = _halo_exchange(arr, ax, m, e, mesh)
+                else:
+                    zshape = list(arr.shape)
+                    zshape[ax] = e
+                    lh = jnp.zeros(zshape, arr.dtype)
+                    rh = lh
+                arr = jnp.concatenate([lh, arr, rh], axis=ax)
+            padded[g] = arr
+        return padded
+
+    def zero_outside_global(arr, g):
+        """Re-impose the zero grid-halo beyond the global boundary (edge
+        shards only) — the shells an edge shard 'computes' there must not
+        leak into later steps."""
+        for ax in range(ndim):
+            m = grid_axes[ax]
+            e = ext[g][ax]
+            if not m or e == 0:
+                continue
+            idx = lax.axis_index(m)
+            n = mesh.shape[m]
+            coord = jnp.arange(arr.shape[ax])
+            inside_lo = (idx > 0) | (coord >= e)
+            inside_hi = (idx < n - 1) | (coord < arr.shape[ax] - e)
+            keep = (inside_lo & inside_hi)
+            shape = [1] * ndim
+            shape[ax] = arr.shape[ax]
+            arr = arr * keep.reshape(shape).astype(arr.dtype)
+        return arr
+
+    def sharded_k_steps(local_arrays, scalars):
+        padded = pad_wide(local_arrays)
+        padded = {g: zero_outside_global(a, g) for g, a in padded.items()}
+        older, newer = swap
+        for i in range(k):
+            mshell = (k - 1 - i) * h_max
+            region = tuple(
+                (-mshell, local_shape[ax] + mshell) if grid_axes[ax]
+                else (0, local_shape[ax])
+                for ax in range(ndim))
+            step_fn = lowering.lower_jax(kernel, ext, local_shape, region)
+            out = step_fn(padded, scalars)
+            new_field = zero_outside_global(out[older], older)
+            padded = dict(padded)
+            padded[older], padded[newer] = padded[newer], new_field
+        # crop interiors; final field lives in `newer` after the last swap
+        def crop(arr, g):
+            idx = tuple(slice(ext[g][ax], ext[g][ax] + local_shape[ax])
+                        for ax in range(ndim))
+            return arr[idx]
+        return {older: crop(padded[older], older),
+                newer: crop(padded[newer], newer)}
+
+    specs = P(*grid_axes)
+    shmapped = shard_map(
+        sharded_k_steps, mesh=mesh,
+        in_specs=({g: specs for g in all_grids}, P()),
+        out_specs={swap[0]: specs, swap[1]: specs},
+        check_rep=False)
+    jitted = jax.jit(shmapped)
+
+    def fn(arrays, scalars):
+        interiors = {}
+        for g in all_grids:
+            o = (np.asarray(arrays[g].shape)
+                 - np.asarray(interior_shape)) // 2
+            idx = tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
+                        for ax in range(ndim))
+            interiors[g] = arrays[g][idx]
+        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+        out = jitted(interiors, scal)
+        result = dict(arrays)
+        for g in out:
+            o = (np.asarray(arrays[g].shape)
+                 - np.asarray(interior_shape)) // 2
+            idx = tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
+                        for ax in range(ndim))
+            result[g] = arrays[g].at[idx].set(out[g])
+        return result
+
+    fn.jitted = jitted
+    fn.shmapped = shmapped
+    fn.mesh = mesh
+    fn.partition_spec = specs
+    fn.local_shape = local_shape
+    return fn

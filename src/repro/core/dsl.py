@@ -1,0 +1,388 @@
+"""StencilPy user-facing DSL (paper Table 1 constructs), hosted in Python.
+
+Usage mirrors paper Listing 1::
+
+    from repro.core import dsl as st
+
+    @st.kernel
+    def star2d1r(u: st.grid, v: st.grid):
+        v.at(0, 0).set(0.5 * u.at(0, 0)
+                       + 0.125 * (u.at(-1, 0) + u.at(1, 0))
+                       + 0.125 * (u.at(0, -1) + u.at(0, 1)))
+
+    @st.target
+    def run(u: st.grid, v: st.grid, iters: st.i32):
+        for _t in range(iters):
+            st.map(e=u.shape)(star2d1r)(u, v)
+            (v, u) = (u, v)
+
+    u = st.grid(dtype=st.f32, shape=(512, 512), order=1)
+    v = st.grid(dtype=st.f32, shape=(512, 512), order=1)
+    st.launch(backend=st.pallas(template="gmem"))(run)(u, v, 10)
+
+Constructs: ``kernel``, ``target``, ``map``, ``launch``, ``at``/``at.set``
+(inside kernels), ``grid``.  Backends: ``xla`` (pure-jnp/XLA), ``pallas``
+(TPU Pallas codegen; ``interpret=True`` on CPU), ``distributed`` (shard_map
+domain decomposition), plus a ``cuda`` compatibility alias so paper Listing 1
+runs verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import analysis as _analysis
+from . import frontend as _frontend
+from . import ir as _ir
+from . import lowering as _lowering
+
+__all__ = [
+    "grid", "kernel", "target", "map", "launch",
+    "f32", "f64", "bf16", "i32", "i64",
+    "xla", "pallas", "tpu", "cuda", "distributed",
+    "Kernel", "LaunchResult",
+]
+
+
+# --------------------------------------------------------------------------
+# dtype markers
+# --------------------------------------------------------------------------
+class _DType:
+    def __init__(self, name: str, np_dtype):
+        self.name = name
+        self.dtype = np_dtype
+
+    def __repr__(self):
+        return f"st.{self.name}"
+
+
+f32 = _DType("f32", jnp.float32)
+f64 = _DType("f64", jnp.float64)
+bf16 = _DType("bf16", jnp.bfloat16)
+i32 = _DType("i32", jnp.int32)
+i64 = _DType("i64", jnp.int64)
+
+
+# --------------------------------------------------------------------------
+# grid
+# --------------------------------------------------------------------------
+class grid:
+    """A stencil data grid: ``shape`` interior points + ``order`` halo cells
+    on each side of every axis (paper §2.1).  Also used as the kernel
+    parameter type annotation (``u: st.grid``)."""
+
+    def __init__(self, dtype: _DType = f32, shape: Tuple[int, ...] = (),
+                 order: int = 0, data: Optional[jnp.ndarray] = None):
+        self.shape = tuple(shape)
+        self.order = int(order)
+        self.dtype = dtype.dtype if isinstance(dtype, _DType) else dtype
+        full = tuple(s + 2 * self.order for s in self.shape)
+        if data is not None:
+            assert tuple(data.shape) == full, (data.shape, full)
+            self.data = jnp.asarray(data, self.dtype)
+        else:
+            self.data = jnp.zeros(full, self.dtype)
+
+    # -- views -------------------------------------------------------------
+    @property
+    def halo(self) -> Tuple[int, ...]:
+        return (self.order,) * len(self.shape)
+
+    @property
+    def interior(self) -> jnp.ndarray:
+        o = self.order
+        idx = tuple(slice(o, o + s) for s in self.shape)
+        return self.data[idx]
+
+    @interior.setter
+    def interior(self, value) -> None:
+        o = self.order
+        idx = tuple(slice(o, o + s) for s in self.shape)
+        self.data = self.data.at[idx].set(jnp.asarray(value, self.dtype))
+
+    # -- init helpers --------------------------------------------------------
+    def randomize(self, seed: int = 0, scale: float = 1.0) -> "grid":
+        rng = np.random.default_rng(seed)
+        self.interior = (scale * rng.standard_normal(self.shape)).astype(np.float32)
+        return self
+
+    def copy(self) -> "grid":
+        g = grid.__new__(grid)
+        g.shape, g.order, g.dtype = self.shape, self.order, self.dtype
+        g.data = self.data
+        return g
+
+    def __repr__(self):
+        return f"st.grid(shape={self.shape}, order={self.order}, dtype={self.dtype})"
+
+
+# --------------------------------------------------------------------------
+# kernel
+# --------------------------------------------------------------------------
+class Kernel:
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.name = fn.__name__
+        t0 = time.perf_counter()
+        self.ir: _ir.StencilIR = _frontend.parse_kernel(fn)
+        self.frontend_time = time.perf_counter() - t0
+        _analysis.check_read_after_write(self.ir)
+        self.info: _analysis.StencilInfo = _analysis.analyze(self.ir)
+        self._cache: Dict = {}
+
+    def __repr__(self):
+        i = self.info
+        return (f"<st.kernel {self.name}: {i.ndim}D {i.shape} order={i.order} "
+                f"flops/pt={i.flops_per_point}>")
+
+
+def kernel(fn: Callable) -> Kernel:
+    return Kernel(fn)
+
+
+def target(fn: Callable) -> Callable:
+    fn._is_stencil_target = True
+    return fn
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    kind: str = "xla"
+
+    def cache_key(self):
+        return dataclasses.astuple(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class xla(Backend):
+    kind: str = "xla"
+
+
+@dataclasses.dataclass(frozen=True)
+class pallas(Backend):
+    """TPU Pallas backend.  ``template`` per paper Table 2; ``block`` is the
+    BlockSpec tile (the paper's Dx/Dy/Dz knobs); ``mem_type`` selects the
+    streaming-dim storage for 2.5D templates ('registers' → unrolled VREG
+    window, 'vmem' → VMEM scratch window, None → shape-directed default:
+    star→registers, box→vmem, mirroring the paper's auto choice);
+    ``interpret`` runs the kernel body in Python on CPU for validation."""
+    kind: str = "pallas"
+    template: str = "gmem"
+    block: Optional[Tuple[int, ...]] = None
+    mem_type: Optional[str] = None
+    prefetch: bool = False
+    interpret: bool = True  # CPU container: interpret by default
+
+    def __post_init__(self):
+        if self.template not in ("gmem", "smem", "f4", "shift", "unroll", "semi"):
+            raise ValueError(f"unknown template {self.template!r}")
+
+
+def tpu(**kw) -> pallas:
+    return pallas(**kw)
+
+
+def cuda(computeCapability: str = "", threadsPerBlock: Optional[Tuple[int, ...]] = None,
+         template: str = "gmem", **kw) -> pallas:
+    """Paper-compat alias: Listing 1's ``st.cuda(...)`` maps onto the Pallas
+    backend (threadsPerBlock → BlockSpec block)."""
+    del computeCapability
+    return pallas(template=template, block=threadsPerBlock, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class distributed(Backend):
+    """shard_map domain decomposition across a device mesh.
+
+    ``grid_axes`` maps stencil-grid axes to mesh axis names, e.g.
+    ('data', 'model') splits axes 0,1 of the domain.  ``inner`` is the
+    per-shard backend.  Halo exchange via ppermute; see core/distributed.py.
+
+    ``time_steps`` > 1 enables overlapped tiling (paper §3 / time skewing
+    at pod level): ONE k·h-wide halo exchange covers k kernel applications,
+    trading a thin shell of redundant compute for 1/k the exchange rounds.
+    Requires ``swap`` — the (older, newer) grid pair rotated between
+    applications (the leapfrog buffer swap), and disables ``overlap``.
+    """
+    kind: str = "distributed"
+    grid_axes: Tuple[Optional[str], ...] = ("data",)
+    inner: Backend = dataclasses.field(default_factory=xla)
+    overlap: bool = True
+    time_steps: int = 1
+    swap: Optional[Tuple[str, str]] = None
+
+    def cache_key(self):
+        return ("distributed", self.grid_axes, self.inner.cache_key(),
+                self.overlap, self.time_steps, self.swap)
+
+
+# --------------------------------------------------------------------------
+# launch context + profiler
+# --------------------------------------------------------------------------
+class _Ctx(threading.local):
+    def __init__(self):
+        self.backend: Backend = xla()
+        self.mesh = None
+        self.profile: Dict[str, float] = {}
+        self.active = False
+
+    def add(self, phase: str, dt: float):
+        self.profile[phase] = self.profile.get(phase, 0.0) + dt
+
+
+_CTX = _Ctx()
+
+
+@dataclasses.dataclass
+class LaunchResult:
+    value: object
+    profile: Dict[str, float]
+
+
+# --------------------------------------------------------------------------
+# map — apply a kernel over a region
+# --------------------------------------------------------------------------
+class _MapCall:
+    def __init__(self, begin=None, end=None, e=None):
+        # syntax sugar (paper §4.2): map(e=u.shape) loops the whole interior
+        if e is not None:
+            begin = tuple(0 for _ in e)
+            end = tuple(e)
+        self.begin, self.end = begin, end
+
+    def __call__(self, k: Kernel):
+        def apply(*args):
+            return _apply_kernel(k, args, self.begin, self.end)
+        return apply
+
+
+def map(begin=None, end=None, e=None) -> _MapCall:  # noqa: A001 (paper name)
+    return _MapCall(begin=begin, end=end, e=e)
+
+
+def _apply_kernel(k: Kernel, args, begin, end):
+    grids: Dict[str, grid] = {}
+    scalars: Dict[str, object] = {}
+    gi = 0
+    for name in k.ir.grid_params:
+        g = args[gi]
+        if not isinstance(g, grid):
+            raise TypeError(f"argument {gi} for '{name}' must be st.grid")
+        grids[name] = g
+        gi += 1
+    for name, _dt in k.ir.scalar_params:
+        scalars[name] = args[gi]
+        gi += 1
+    if gi != len(args):
+        raise TypeError(f"{k.name} expects {gi} args, got {len(args)}")
+
+    interior = next(iter(grids.values())).shape
+    for g in grids.values():
+        if g.shape != interior:
+            raise ValueError("all grids in one map must share interior shape")
+
+    region = None
+    if begin is not None:
+        region = tuple((int(b), int(e)) for b, e in zip(begin, end))
+        if region == tuple((0, s) for s in interior):
+            region = None  # whole-interior sugar (paper's map(e=u.shape))
+
+    backend = _CTX.backend if _CTX.active else xla()
+    key = (backend.cache_key(), tuple(sorted((n, g.shape, g.order, str(g.dtype))
+                                             for n, g in grids.items())), region)
+    entry = k._cache.get(key)
+    if entry is None:
+        t0 = time.perf_counter()
+        entry = _build_callable(k, backend, grids, region)
+        _CTX.add("codegen", time.perf_counter() - t0)
+        k._cache[key] = entry
+
+    arrays = {n: g.data for n, g in grids.items()}
+    t0 = time.perf_counter()
+    out = entry(arrays, scalars)
+    jax.block_until_ready(out)
+    _CTX.add("kernel", time.perf_counter() - t0)
+    for name in k.ir.output_grids():
+        grids[name].data = out[name]
+    return None
+
+
+def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region):
+    halos = {n: g.halo for n, g in grids.items()}
+    interior = next(iter(grids.values())).shape
+    if backend.kind == "xla":
+        fn = _lowering.lower_jax(k.ir, halos, interior, region)
+        jitted = jax.jit(fn)
+    elif backend.kind == "pallas":
+        from repro.kernels.stencil import codegen as _codegen
+        fn = _codegen.lower_pallas(k.ir, halos, interior, region, backend)
+        jitted = jax.jit(fn)
+    elif backend.kind == "distributed":
+        from . import distributed as _dist
+        fn = _dist.lower_distributed(k.ir, halos, interior, region,
+                                     backend, _CTX.mesh)
+
+        def run_dist(arrays, scalars):
+            return fn(arrays, scalars)
+        return run_dist
+    else:
+        raise ValueError(backend.kind)
+
+    # explicit AOT compile so the profiler separates comp from kernel time
+    abstract_arrays = {n: jax.ShapeDtypeStruct(g.data.shape, g.dtype)
+                       for n, g in grids.items()}
+    abstract_scalars = {n: jax.ShapeDtypeStruct((), jnp.float32)
+                        for n, _ in k.ir.scalar_params}
+    t0 = time.perf_counter()
+    try:
+        compiled = jitted.lower(abstract_arrays, abstract_scalars).compile()
+        _CTX.add("comp", time.perf_counter() - t0)
+
+        def run(arrays, scalars):
+            scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+            return compiled(arrays, scal)
+        return run
+    except Exception:
+        # fall back to on-demand jit (e.g. scalar dtype mismatch)
+        _CTX.add("comp", time.perf_counter() - t0)
+
+        def run(arrays, scalars):
+            scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+            return jitted(arrays, scal)
+        return run
+
+
+# --------------------------------------------------------------------------
+# launch
+# --------------------------------------------------------------------------
+class _Launcher:
+    def __init__(self, backend: Backend, mesh=None, profile: bool = True):
+        self.backend, self.mesh, self.profile = backend, mesh, profile
+
+    def __call__(self, tgt: Callable):
+        def run(*args, **kw) -> LaunchResult:
+            prev = (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active)
+            _CTX.backend, _CTX.mesh = self.backend, self.mesh
+            _CTX.profile, _CTX.active = {}, True
+            t0 = time.perf_counter()
+            try:
+                value = tgt(*args, **kw)
+            finally:
+                prof = _CTX.profile
+                prof["total"] = time.perf_counter() - t0
+                _CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active = prev
+            return LaunchResult(value=value, profile=prof)
+        return run
+
+
+def launch(backend: Backend = None, mesh=None, profile: bool = True) -> _Launcher:
+    return _Launcher(backend or xla(), mesh=mesh, profile=profile)

@@ -1,0 +1,125 @@
+"""Lower StencilIR to pure-jnp shifted-slice code (the ``xla`` backend).
+
+This is the portable, always-correct lowering — the analogue of the paper's
+reference OpenMP backend — and doubles as the oracle every Pallas kernel is
+validated against (``kernels/stencil/ref.py`` re-exports it).
+
+The lowering turns each ``Tap(grid, offsets)`` into a static ``lax.slice`` of
+the (halo-padded) grid array and evaluates the expression tree vectorized
+over the whole region at once; XLA fuses the result into a single elementwise
+loop over the grid.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from . import ir
+
+_MATH = {
+    "exp": jnp.exp, "sqrt": jnp.sqrt, "abs": jnp.abs, "sin": jnp.sin,
+    "cos": jnp.cos, "tanh": jnp.tanh, "min": jnp.minimum, "max": jnp.maximum,
+}
+
+
+def eval_expr(e: ir.Expr, read: Callable[[str, Tuple[int, ...]], jnp.ndarray],
+              scalars: Mapping[str, jnp.ndarray], local_env: Dict[str, jnp.ndarray]):
+    """Evaluate an IR expression with a pluggable tap-``read`` function.
+
+    Shared by this lowering, the Pallas code generators, and the distributed
+    backend — each supplies its own ``read`` (slice / VMEM ref / halo view).
+    """
+    if isinstance(e, ir.Const):
+        return e.value
+    if isinstance(e, ir.ScalarRef):
+        return scalars[e.name]
+    if isinstance(e, ir.LocalRef):
+        return local_env[e.name]
+    if isinstance(e, ir.Tap):
+        return read(e.grid, e.offsets)
+    if isinstance(e, ir.Neg):
+        return -eval_expr(e.operand, read, scalars, local_env)
+    if isinstance(e, ir.BinOp):
+        l = eval_expr(e.lhs, read, scalars, local_env)
+        r = eval_expr(e.rhs, read, scalars, local_env)
+        if e.op == "+":
+            return l + r
+        if e.op == "-":
+            return l - r
+        if e.op == "*":
+            return l * r
+        if e.op == "/":
+            return l / r
+        if e.op == "**":
+            return l ** r
+        raise ValueError(f"bad op {e.op}")
+    if isinstance(e, ir.Call):
+        args = [eval_expr(a, read, scalars, local_env) for a in e.args]
+        return _MATH[e.fn](*args)
+    raise TypeError(f"bad expr {e!r}")
+
+
+def run_statements(kernel: ir.StencilIR,
+                   read_from: Callable[[jnp.ndarray, str, Tuple[int, ...]], jnp.ndarray],
+                   arrays: Dict[str, jnp.ndarray],
+                   scalars: Mapping[str, jnp.ndarray],
+                   write: Callable[[jnp.ndarray, jnp.ndarray, str], jnp.ndarray],
+                   region_shape: Tuple[int, ...],
+                   dtype) -> Dict[str, jnp.ndarray]:
+    """Execute kernel statements sequentially over ``arrays`` (functional)."""
+    local_env: Dict[str, jnp.ndarray] = {}
+    arrays = dict(arrays)
+
+    def read(g, offs):
+        return read_from(arrays[g], g, offs)
+
+    for stmt in kernel.body:
+        if isinstance(stmt, ir.LocalDef):
+            local_env[stmt.name] = eval_expr(stmt.expr, read, scalars, local_env)
+        else:
+            val = eval_expr(stmt.expr, read, scalars, local_env)
+            val = jnp.broadcast_to(jnp.asarray(val, dtype), region_shape)
+            arrays[stmt.grid] = write(arrays[stmt.grid], val, stmt.grid)
+    return arrays
+
+
+def lower_jax(kernel: ir.StencilIR,
+              halos: Mapping[str, Tuple[int, ...]],
+              interior_shape: Tuple[int, ...],
+              region: Optional[Tuple[Tuple[int, int], ...]] = None):
+    """Build ``fn(arrays: dict, scalars: dict) -> dict`` for this kernel.
+
+    arrays map grid-param name → full (halo-padded) jnp array; the function
+    returns the dict with output grids updated on ``region`` (interior
+    coordinates, default the whole interior).  Pure and jittable.
+    """
+    ndim = kernel.ndim
+    if region is None:
+        region = tuple((0, s) for s in interior_shape)
+    region_shape = tuple(e - b for b, e in region)
+
+    def read_from(arr, g, offs):
+        h = halos[g]
+        idx = tuple(
+            slice(h[ax] + region[ax][0] + offs[ax],
+                  h[ax] + region[ax][1] + offs[ax])
+            for ax in range(ndim)
+        )
+        return arr[idx]
+
+    def write(arr, val, g):
+        h = halos[g]
+        idx = tuple(
+            slice(h[ax] + region[ax][0], h[ax] + region[ax][1])
+            for ax in range(ndim)
+        )
+        return arr.at[idx].set(val)
+
+    def fn(arrays: Dict[str, jnp.ndarray], scalars: Mapping[str, jnp.ndarray]):
+        dtype = arrays[kernel.output_grids()[0]].dtype
+        return run_statements(kernel, read_from, arrays, scalars, write,
+                              region_shape, dtype)
+
+    return fn

@@ -1,0 +1,1 @@
+from . import conv1d, ops, ref  # noqa: F401

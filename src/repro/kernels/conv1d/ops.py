@@ -1,0 +1,13 @@
+"""jit'd wrapper for the causal conv1d kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .conv1d import causal_conv1d_pallas
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def causal_conv1d(x, w, interpret: bool = True):
+    return causal_conv1d_pallas(x, w, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the causal depthwise conv1d kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def causal_conv1d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, W]; w: [cw, W] → y_t = Σ_k w[k] · x_{t-cw+1+k} (zero hist)."""
+    cw = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    return sum(xp[:, k:k + x.shape[1]] * w[k][None, None, :]
+               for k in range(cw))

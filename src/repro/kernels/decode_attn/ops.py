@@ -1,0 +1,15 @@
+"""jit'd wrapper for the flash decode-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .decode_attn import decode_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, lengths, block_s: int = 512,
+                     interpret: bool = True):
+    return decode_attention_pallas(q, k, v, lengths, block_s=block_s,
+                                   interpret=interpret)

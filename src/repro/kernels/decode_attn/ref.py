@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the flash decode-attention kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def decode_attention_ref(q, k, v, lengths):
+    """q: [B,H,hd]; k,v: [B,S,K,hd]; lengths: [B] valid KV entries.
+    GQA grouping: q head h reads kv head h // (H//K).  → [B,H,hd]."""
+    B, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (hd ** -0.5)
+    mask = jnp.arange(S)[None] < lengths[:, None]          # [B,S]
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

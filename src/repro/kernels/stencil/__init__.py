@@ -1,0 +1,1 @@
+from . import codegen, ops, ref  # noqa: F401

@@ -1,0 +1,532 @@
+"""StencilIR → Pallas TPU kernel code generator (paper §4.5 templates).
+
+Templates (paper Table 2), re-derived for the TPU memory hierarchy:
+
+  gmem   — 3D/2D blocking; each tap is read by concatenating slices of the
+           center block and its ±1 neighbor blocks (halo comes from
+           *neighbor-block input refs*, the TPU analogue of reading global
+           memory through the pipelined block fetch).
+  smem   — 3D/2D blocking; the halo'd tile is materialized once in a VMEM
+           scratch buffer and taps are static slices of it (the shared-
+           memory analogue).
+  f4     — gmem with lane-aligned blocks (last dim %128, 2nd-last %8): the
+           VPU-vectorization analogue of float4.
+  shift  — 2.5D streaming along axis 0: a rolling window of 2h+1 planes is
+           carried through a fori_loop (mem_type 'registers' keeps it as
+           loop-carried values ⇒ VREGs; 'vmem' streams planes straight from
+           the VMEM tile).  Window advanced with jnp.roll.
+  unroll — like shift but the window shift is statically unrolled
+           (concatenate-rebuild ⇒ fixed VREG assignment).
+  semi   — Semi-stencil [de la Cruz & Araya-Polo]: forward-scatter of each
+           input plane into a rolling buffer of partial output planes; each
+           input plane is touched exactly once, output planes complete with
+           lag 2H.  Requires the kernel to be linear in its taps.
+
+Halo handling: inputs are pre-padded by one full block per side (ops-level
+wrapper below), so every neighbor-block index `g+1+δ` is in bounds and no
+boundary conditionals appear inside the kernel — this is the consolidation
+the paper's §6.2.1 'future work' asks for (one set of conditionals → zero).
+
+The expression evaluator is shared with the XLA lowering
+(`repro.core.lowering.eval_expr`), so all backends execute the same IR.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+import jax.experimental.pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from repro.core import analysis, ir, lowering
+
+DEFAULT_BLOCK = {2: (8, 128), 3: (8, 8, 128)}
+STREAM_BLOCK = {2: (16, 128), 3: (16, 8, 128)}
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def choose_block(user_block, template: str, ndim: int, region_shape):
+    if user_block is not None:
+        if len(user_block) != ndim:
+            raise ValueError(f"block must have {ndim} dims")
+        return tuple(int(b) for b in user_block)
+    base = (STREAM_BLOCK if template in ("shift", "unroll", "semi")
+            else DEFAULT_BLOCK)[ndim]
+    out = []
+    for ax, b in enumerate(base):
+        align = 128 if ax == ndim - 1 else 8
+        out.append(min(b, _round_up(region_shape[ax], align)))
+    return tuple(out)
+
+
+def _deltas_for(tap_offsets: Sequence[Tuple[int, ...]]) -> List[Tuple[int, ...]]:
+    """Block-neighbor offsets needed to cover these taps (star → axis
+    neighbors only; box → the full needed corner set).  This is the
+    shape-directed specialization at the heart of the paper."""
+    ds = set()
+    for offs in tap_offsets:
+        axsets = []
+        for o in offs:
+            if o < 0:
+                axsets.append((-1, 0))
+            elif o > 0:
+                axsets.append((0, 1))
+            else:
+                axsets.append((0,))
+        ds.update(itertools.product(*axsets))
+    return sorted(ds)
+
+
+# ---------------------------------------------------------------------------
+# tile assembly: paste neighbor blocks into a halo'd tile
+# ---------------------------------------------------------------------------
+def _paste_slices(delta, B, hg, ht):
+    """(src_slice, dst_slice) per axis for pasting neighbor block `delta`
+    into a tile with per-axis halo ht (ht >= hg; extra stays zero)."""
+    src, dst = [], []
+    for ax, d in enumerate(delta):
+        b, h, t = B[ax], hg[ax], ht[ax]
+        if d == -1:
+            src.append(slice(b - h, b))
+            dst.append(slice(t - h, t))
+        elif d == 0:
+            src.append(slice(0, b))
+            dst.append(slice(t, t + b))
+        else:
+            src.append(slice(0, h))
+            dst.append(slice(t + b, t + b + h))
+    return tuple(src), tuple(dst)
+
+
+def _assemble_tile(read_block, g, deltas, B, hg, ht, dtype):
+    tile_shape = tuple(B[ax] + 2 * ht[ax] for ax in range(len(B)))
+    tile = jnp.zeros(tile_shape, dtype)
+    for d in deltas:
+        src, dst = _paste_slices(d, B, hg, ht)
+        tile = tile.at[dst].set(read_block(g, d)[src])
+    return tile
+
+
+# ---------------------------------------------------------------------------
+# statement execution shared by templates
+# ---------------------------------------------------------------------------
+def _exec_statements(kernel: ir.StencilIR, tap_read, scalars, shape, dtype):
+    """Run kernel statements; returns {output grid: value}.
+
+    ``tap_read(grid, offsets)`` reads *old* values; center reads of grids
+    written by an earlier statement return the new value (sequential
+    multi-statement semantics, checked by analysis.check_read_after_write).
+    """
+    env: Dict[str, jnp.ndarray] = {}
+    locals_env: Dict[str, jnp.ndarray] = {}
+
+    def read(g, offs):
+        if g in env and not any(offs):
+            return env[g]
+        return tap_read(g, offs)
+
+    for stmt in kernel.body:
+        val = lowering.eval_expr(stmt.expr, read, scalars, locals_env)
+        if isinstance(stmt, ir.LocalDef):
+            locals_env[stmt.name] = val
+        else:
+            env[stmt.grid] = jnp.broadcast_to(jnp.asarray(val, dtype), shape)
+    return env
+
+
+# ---------------------------------------------------------------------------
+# template kernel bodies
+# ---------------------------------------------------------------------------
+def _make_body_blocked(kernel, info, spec, use_scratch: bool):
+    """gmem / f4 (use_scratch=False) and smem (use_scratch=True) bodies."""
+    B, gh, ndim = spec["B"], spec["gh"], spec["ndim"]
+    in_index, scal_names, out_grids, dtype = (
+        spec["in_index"], spec["scal_names"], spec["out_grids"], spec["dtype"])
+
+    def body(*refs):
+        n_in = len(in_index)
+        in_refs = refs[:n_in]
+        scal_refs = refs[n_in:n_in + len(scal_names)]
+        out_refs = refs[n_in + len(scal_names):n_in + len(scal_names) + len(out_grids)]
+        scratch = refs[n_in + len(scal_names) + len(out_grids):]
+
+        loaded: Dict = {}
+
+        def read_block(g, d):
+            key = (g, d)
+            if key not in loaded:
+                loaded[key] = in_refs[in_index[key]][...]
+            return loaded[key]
+
+        scalars = {n: r[0, 0] for n, r in zip(scal_names, scal_refs)}
+
+        if use_scratch:
+            tiles = {}
+            for gi, g in enumerate(spec["in_grids"]):
+                sref = scratch[gi]
+                sref[...] = jnp.zeros(sref.shape, dtype)
+                for d in spec["deltas"][g]:
+                    src, dst = _paste_slices(d, B, gh[g], gh[g])
+                    sref[dst] = read_block(g, d)[src]
+                tiles[g] = sref
+
+            def tap_read(g, offs):
+                h = gh[g]
+                idx = tuple(slice(h[ax] + offs[ax], h[ax] + offs[ax] + B[ax])
+                            for ax in range(ndim))
+                return tiles[g][idx]
+        else:
+            def tap_read(g, offs):
+                # concat-of-neighbor-block-slices, axis by axis
+                def rec(axis, delta):
+                    if axis == ndim:
+                        return read_block(g, delta)
+                    o = offs[axis]
+                    if o == 0:
+                        return rec(axis + 1, delta + (0,))
+                    lo = rec(axis + 1, delta + ((-1,) if o < 0 else (0,)))
+                    hi = rec(axis + 1, delta + ((0,) if o < 0 else (1,)))
+                    cut = B[axis] + o if o < 0 else o
+                    a = lax.slice_in_dim(lo, cut, B[axis], axis=axis)
+                    b = lax.slice_in_dim(hi, 0, cut, axis=axis)
+                    return lax.concatenate([a, b], dimension=axis)
+                return rec(0, ())
+
+        env = _exec_statements(kernel, tap_read, scalars, B, dtype)
+        for g, oref in zip(out_grids, out_refs):
+            oref[...] = env[g]
+
+    return body
+
+
+def _make_body_streaming(kernel, info, spec, *, variant: str,
+                         mem_type: str, prefetch: bool):
+    """shift / unroll / semi bodies: 2.5D streaming along axis 0."""
+    B, gh, ndim = spec["B"], spec["gh"], spec["ndim"]
+    in_index, scal_names, out_grids, dtype = (
+        spec["in_index"], spec["scal_names"], spec["out_grids"], spec["dtype"])
+    in_grids = spec["in_grids"]
+    plane_shape = tuple(B[1:])
+    bx = B[0]
+
+    if variant == "semi":
+        # linearize: out_grid -> ([(grid, offs, coeff_expr)], const_expr).
+        # Coefficients may contain center-only taps (coefficient *fields*,
+        # e.g. vp² in acoustic ISO) — evaluated per output plane below.
+        lin = {}
+        written = set()
+        for a in analysis.inline_locals(kernel):
+            terms, const = analysis.linearize(a.expr, allow_center_fields=True)
+            for t in ir.StencilIR(kernel.name, kernel.ndim, kernel.grid_params,
+                                  kernel.scalar_params, (a,)).taps():
+                if t.grid in written:
+                    raise ValueError("semi template does not support reading "
+                                     "a previously-written grid")
+            written.add(a.grid)
+            lin[a.grid] = ([(g, offs, c) for (g, offs), c in terms.items()],
+                           const)
+        H = max((abs(offs[0]) for terms, _ in lin.values()
+                 for _, offs, _ in terms), default=0)
+    else:
+        H = max((gh[g][0] for g in in_grids), default=0)
+
+    def body(*refs):
+        n_in = len(in_index)
+        in_refs = refs[:n_in]
+        scal_refs = refs[n_in:n_in + len(scal_names)]
+        out_refs = refs[n_in + len(scal_names):n_in + len(scal_names) + len(out_grids)]
+
+        scalars = {n: r[0, 0] for n, r in zip(scal_names, scal_refs)}
+
+        def read_block(g, d):
+            return in_refs[in_index[(g, d)]][...]
+
+        # assemble per-grid x-column tiles with x-halo H (>= per-grid halo;
+        # extra planes stay zero, harmless for the linear scatter)
+        tiles = {}
+        for g in in_grids:
+            ht = (H,) + tuple(gh[g][1:])
+            tiles[g] = _assemble_tile(read_block, g, spec["deltas"][g],
+                                      B, gh[g], ht, dtype)
+
+        def plane(g, t):
+            """Input plane at tile-x index t, full y/z halo extent."""
+            return lax.dynamic_slice_in_dim(tiles[g], t, 1, axis=0)[0]
+
+        def center_yz(g, arr, offs_yz):
+            h = gh[g][1:]
+            idx = tuple(slice(h[ax] + offs_yz[ax], h[ax] + offs_yz[ax] + B[1 + ax])
+                        for ax in range(ndim - 1))
+            return arr[idx]
+
+        if variant == "semi":
+            def field_read_at(tile_idx):
+                """Read center-only coefficient-field taps at the plane with
+                the given (dynamic) tile-x index."""
+                def tr(g, offs):
+                    return center_yz(g, plane(g, tile_idx),
+                                     tuple(offs[1:]))
+                return tr
+
+            def step(t, carry):
+                # Invariant: at start of step t, P[k] holds the partial sum
+                # for output plane (t - 2H + k).  Input plane at tile-x
+                # index t is region plane x_in = t - H; its term (g,offs=d)
+                # contributes coeff(x_in - d) * u[x_in] to out plane
+                # o = x_in - d (slot H - d, coeff-field tile idx t - d,
+                # clamped reads only ever reach never-emitted planes).
+                Ps, outs = carry
+                newPs, newouts = [], []
+                for og, P, out in zip(out_grids, Ps, outs):
+                    terms, const = lin[og]
+                    for (g, offs, c) in terms:
+                        d = offs[0]
+                        cval = lowering.eval_expr(
+                            c, field_read_at(t - d), scalars, {})
+                        contrib = cval * center_yz(g, plane(g, t), offs[1:])
+                        P = P.at[H - d].add(contrib)
+                    cv = lowering.eval_expr(
+                        const, field_read_at(t - H), scalars, {})
+                    done = P[0] + cv
+                    o = t - 2 * H
+                    out = lax.cond(
+                        o >= 0,
+                        lambda out=out, done=done, o=o:
+                            lax.dynamic_update_slice_in_dim(
+                                out, done[None], o, axis=0),
+                        lambda out=out: out)
+                    P = jnp.concatenate(
+                        [P[1:], jnp.zeros((1,) + plane_shape, dtype)], axis=0)
+                    newPs.append(P)
+                    newouts.append(out)
+                return tuple(newPs), tuple(newouts)
+
+            Ps0 = tuple(jnp.zeros((2 * H + 1,) + plane_shape, dtype)
+                        for _ in out_grids)
+            outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+            _, outs = lax.fori_loop(0, bx + 2 * H, step, (Ps0, outs0))
+            for out, oref in zip(outs, out_refs):
+                oref[...] = out
+            return
+
+        # ---- shift / unroll ------------------------------------------------
+        win_len = {g: 2 * gh[g][0] + 1 for g in in_grids}
+
+        if mem_type == "vmem":
+            # stream straight from the VMEM tile: taps = dynamic plane slices
+            def compute_plane(t):
+                def tap_read(g, offs):
+                    # tile x index of region plane t+offs[0]: t + H + offs[0]
+                    p = plane(g, t + H + offs[0])
+                    return center_yz(g, p, offs[1:])
+                return _exec_statements(kernel, tap_read, scalars,
+                                        plane_shape, dtype)
+
+            def step(t, outs):
+                env = compute_plane(t)
+                return tuple(
+                    lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
+                    for g, out in zip(out_grids, outs))
+
+            outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+            outs = lax.fori_loop(0, bx, step, outs0)
+            for out, oref in zip(outs, out_refs):
+                oref[...] = out
+            return
+
+        # mem_type == 'registers': rolling loop-carried window per grid.
+        # Invariant: after `advance` at step t, window slot k holds the
+        # plane at region coord t - hg0 + k (tile-x index t - hg0 + k + H).
+        def init_window(g):
+            n = win_len[g]
+            hg0 = gh[g][0]
+            planes = [jnp.zeros(tiles[g].shape[1:], dtype)]
+            for k in range(1, n):
+                planes.append(plane(g, H - hg0 + k - 1))
+            return jnp.stack(planes, axis=0)
+
+        def advance(W, new_plane):
+            if variant == "unroll":
+                return jnp.concatenate([W[1:], new_plane[None]], axis=0)
+            W = jnp.roll(W, -1, axis=0)
+            return W.at[-1].set(new_plane)
+
+        def step(t, carry):
+            Ws, outs = carry
+            # newest slot holds region plane t + hg0 → tile-x index t+hg0+H
+            Ws2 = tuple(advance(W, plane(g, t + gh[g][0] + H))
+                        for g, W in zip(in_grids, Ws))
+
+            def tap_read(g, offs):
+                W = Ws2[in_grids.index(g)]
+                slot = gh[g][0] + offs[0]
+                return center_yz(g, W[slot], offs[1:])
+
+            env = _exec_statements(kernel, tap_read, scalars, plane_shape, dtype)
+            outs = tuple(
+                lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
+                for g, out in zip(out_grids, outs))
+            return Ws2, outs
+
+        Ws0 = tuple(init_window(g) for g in in_grids)
+        outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+        _, outs = lax.fori_loop(0, bx, step, (Ws0, outs0))
+        for out, oref in zip(outs, out_refs):
+            oref[...] = out
+
+    return body
+
+
+# ---------------------------------------------------------------------------
+# top-level lowering
+# ---------------------------------------------------------------------------
+def lower_pallas(kernel: ir.StencilIR,
+                 halos: Dict[str, Tuple[int, ...]],
+                 interior_shape: Tuple[int, ...],
+                 region,
+                 backend):
+    """Build ``fn(arrays: dict, scalars: dict) -> dict`` running the kernel
+    through a generated Pallas TPU kernel (interpret=True executes the body
+    in Python on CPU)."""
+    info = analysis.analyze(kernel)
+    ndim = kernel.ndim
+    if ndim not in (2, 3):
+        raise ValueError("pallas backend supports 2D and 3D stencils")
+    if region is None:
+        region = tuple((0, s) for s in interior_shape)
+    R = tuple(e - b for b, e in region)
+    template = backend.template
+    B = choose_block(backend.block, template, ndim, R)
+
+    in_grids = info.input_grids
+    out_grids = info.output_grids
+    gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in in_grids}
+    for g in in_grids:
+        for ax in range(ndim):
+            if gh[g][ax] > B[ax]:
+                raise ValueError(
+                    f"halo {gh[g][ax]} exceeds block {B[ax]} on axis {ax}; "
+                    "increase block size")
+    if template == "f4":
+        if B[-1] % 128 or (ndim >= 2 and B[-2] % 8):
+            raise ValueError("f4 template requires lane-aligned blocks "
+                             "(last dim %128, 2nd-last %8)")
+
+    mem_type = backend.mem_type
+    if mem_type is None:
+        mem_type = "registers" if info.shape in ("star", "point") else "vmem"
+
+    nb = tuple(-(-R[ax] // B[ax]) for ax in range(ndim))
+
+    # taps per grid → needed block-neighbor deltas
+    taps_by_grid: Dict[str, List[Tuple[int, ...]]] = {g: [] for g in in_grids}
+    for t in kernel.taps():
+        taps_by_grid[t.grid].append(t.offsets)
+    deltas = {g: _deltas_for(taps_by_grid[g]) for g in in_grids}
+
+    def _neighbor_index_map(d):
+        def imap(*gi):
+            return tuple(gi[ax] + 1 + d[ax] for ax in range(ndim))
+        return imap
+
+    in_index: Dict = {}
+    in_specs = []
+    for g in in_grids:
+        for d in deltas[g]:
+            in_index[(g, d)] = len(in_specs)
+            in_specs.append(pl.BlockSpec(B, _neighbor_index_map(d)))
+    scal_names = [n for n, _ in kernel.scalar_params]
+    for _ in scal_names:
+        in_specs.append(pl.BlockSpec((1, 1), lambda *gi: (0, 0)))
+
+    out_specs = [pl.BlockSpec(B, lambda *gi: gi) for _ in out_grids]
+
+    spec = dict(B=B, gh=gh, ndim=ndim, in_index=in_index,
+                scal_names=scal_names, out_grids=out_grids,
+                in_grids=in_grids, deltas=deltas, dtype=None)
+
+    grid = nb
+
+    def fn(arrays: Dict[str, jnp.ndarray], scalars: Dict[str, jnp.ndarray]):
+        dtype = arrays[out_grids[0]].dtype
+        spec_d = dict(spec, dtype=dtype)
+
+        if template in ("gmem", "f4"):
+            body = _make_body_blocked(kernel, info, spec_d, use_scratch=False)
+            scratch_shapes = []
+        elif template == "smem":
+            body = _make_body_blocked(kernel, info, spec_d, use_scratch=True)
+            scratch_shapes = [
+                pltpu.VMEM(tuple(B[ax] + 2 * gh[g][ax] for ax in range(ndim)),
+                           dtype)
+                for g in in_grids]
+        else:
+            body = _make_body_streaming(kernel, info, spec_d,
+                                        variant=template, mem_type=mem_type,
+                                        prefetch=backend.prefetch)
+            scratch_shapes = []
+
+        # ---- pad inputs: one extra block per side + halo placement -------
+        ops = []
+        for g in in_grids:
+            arr = arrays[g]
+            halo_arr = halos[g]
+            h = gh[g]
+            for ax in range(ndim):
+                if halo_arr[ax] + region[ax][0] < h[ax]:
+                    raise ValueError(
+                        f"grid '{g}' halo {halo_arr[ax]} too small for "
+                        f"kernel halo {h[ax]} at region {region[ax]}")
+            sl = tuple(slice(halo_arr[ax] + region[ax][0] - h[ax],
+                             halo_arr[ax] + region[ax][1] + h[ax])
+                       for ax in range(ndim))
+            W = arr[sl]
+            pads = []
+            for ax in range(ndim):
+                before = B[ax] - h[ax]
+                total = (nb[ax] + 2) * B[ax]
+                pads.append((before, total - before - W.shape[ax]))
+            P = jnp.pad(W, pads)
+            for d in deltas[g]:
+                ops.append(P)
+        for n in scal_names:
+            ops.append(jnp.asarray(scalars[n], jnp.float32).reshape(1, 1))
+
+        call = pl.pallas_call(
+            body,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=[jax.ShapeDtypeStruct(
+                tuple(nb[ax] * B[ax] for ax in range(ndim)), dtype)
+                for _ in out_grids],
+            scratch_shapes=scratch_shapes,
+            interpret=backend.interpret,
+            name=f"stencil_{kernel.name}_{template}",
+            compiler_params=pltpu.CompilerParams(
+                dimension_semantics=("arbitrary",) * ndim),
+        )
+        outs = call(*ops)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+
+        result = dict(arrays)
+        for g, O in zip(out_grids, outs):
+            full = arrays[g]
+            halo_arr = halos[g]
+            idx = tuple(slice(halo_arr[ax] + region[ax][0],
+                              halo_arr[ax] + region[ax][1])
+                        for ax in range(ndim))
+            cut = tuple(slice(0, R[ax]) for ax in range(ndim))
+            result[g] = full.at[idx].set(O[cut])
+        return result
+
+    return fn

@@ -1,0 +1,46 @@
+"""jit'd public wrappers around the generated Pallas stencil kernels.
+
+``stencil_apply`` is the standalone array-level API (used by the LM
+substrate, e.g. the conv1d kernel); the DSL's ``st.map`` goes through
+``codegen.lower_pallas`` directly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dsl as st
+
+from . import codegen
+
+
+def stencil_apply(kernel: "st.Kernel",
+                  arrays: Dict[str, jnp.ndarray],
+                  scalars: Optional[Mapping[str, jnp.ndarray]] = None,
+                  *,
+                  halos: Optional[Mapping[str, Tuple[int, ...]]] = None,
+                  template: str = "gmem",
+                  block: Optional[Tuple[int, ...]] = None,
+                  mem_type: Optional[str] = None,
+                  interpret: bool = True,
+                  region=None) -> Dict[str, jnp.ndarray]:
+    """Apply a ``@st.kernel`` to raw halo-padded arrays.
+
+    ``arrays`` maps grid-param name → array whose shape is
+    interior + 2*halo per axis.  Returns the dict with outputs updated on
+    the interior (or ``region``).
+    """
+    k_ir = kernel.ir
+    if halos is None:
+        h = kernel.info.halo
+        halos = {g: h for g in k_ir.grid_params}
+    some = next(iter(arrays.values()))
+    g0 = k_ir.grid_params[0]
+    interior = tuple(s - 2 * hh for s, hh in zip(arrays[g0].shape, halos[g0]))
+    backend = st.pallas(template=template, block=block, mem_type=mem_type,
+                        interpret=interpret)
+    fn = codegen.lower_pallas(k_ir, dict(halos), interior, region, backend)
+    return jax.jit(fn)(dict(arrays), dict(scalars or {}))

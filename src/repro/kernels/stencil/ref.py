@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the generated stencil kernels.
+
+This re-exports the XLA lowering (``repro.core.lowering.lower_jax``), which
+is the paper's reference-backend analogue.  Every Pallas template is
+validated against it in ``tests/test_stencil_kernels.py`` over a sweep of
+shapes, dtypes and templates.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import ir, lowering
+
+
+def reference_apply(kernel: ir.StencilIR,
+                    halos: Mapping[str, Tuple[int, ...]],
+                    interior_shape: Tuple[int, ...],
+                    arrays: Dict[str, jnp.ndarray],
+                    scalars: Optional[Mapping[str, jnp.ndarray]] = None,
+                    region=None) -> Dict[str, jnp.ndarray]:
+    fn = lowering.lower_jax(kernel, halos, interior_shape, region)
+    return fn(arrays, scalars or {})

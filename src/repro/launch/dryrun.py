@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  512 placeholder host devices let jax.make_mesh build
+# the production meshes; nothing is ever executed — every cell is
+# .lower().compile() against ShapeDtypeStructs only.
+import argparse           # noqa: E402
+import gzip               # noqa: E402
+import json               # noqa: E402
+import time               # noqa: E402
+import traceback          # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+import jax                # noqa: E402
+import jax.numpy as jnp   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs, sharding  # noqa: E402
+from repro.configs.shapes import SHAPES, applicable, input_specs  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import api  # noqa: E402
+from repro.serving.serve_loop import make_serve_step  # noqa: E402
+from repro.train import train_loop  # noqa: E402
+from repro.train.optimizer import OptConfig  # noqa: E402
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts", "dryrun")
+
+
+def _batch_shard_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+def _mem_stats(compiled) -> Optional[Dict]:
+    try:
+        m = compiled.memory_analysis()
+    except Exception:
+        return None
+    if m is None:
+        return None
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        if hasattr(m, k):
+            out[k] = int(getattr(m, k))
+    # bytes resident per device during the step (args aliased with outputs
+    # are counted once via alias subtraction)
+    if out:
+        out["per_device_total_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def _cost_stats(compiled) -> Optional[Dict]:
+    try:
+        c = compiled.cost_analysis()
+    except Exception:
+        return None
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    if not isinstance(c, dict):
+        return None
+    keep = {}
+    for k, v in c.items():
+        if k in ("flops", "transcendentals", "bytes accessed") or \
+                k.startswith("bytes accessed"):
+            keep[k] = float(v)
+    return keep
+
+
+def make_prefill_step(cfg):
+    from repro.models import layers as L
+
+    def prefill(params, batch):
+        hid, _aux = api.forward_hidden(cfg, params, batch)
+        return L.unembed(params["embed"], hid[:, -1:], cfg)
+
+    return prefill
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: Optional[Dict] = None):
+    """Lower one (arch × shape × mesh) cell; returns (lowered, meta)."""
+    overrides = dict(overrides or {})
+    n_mb_override = overrides.pop("n_microbatches", None)
+    cfg = configs.get(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    specs = input_specs(cfg, shape)
+    pshapes = api.param_shapes(cfg)
+    pshard = sharding.param_shardings(cfg, mesh, pshapes)
+
+    if shape.kind == "train":
+        n_mb = n_mb_override or max(
+            1, shape.global_batch // _batch_shard_size(mesh))
+        tc = train_loop.TrainConfig(opt=OptConfig(), n_microbatches=n_mb)
+        with mesh:
+            lowered, _ = train_loop.compile_train_step(cfg, tc, mesh, specs)
+        meta = {"step": "train_step", "n_microbatches": n_mb}
+        return lowered, meta, mesh, cfg
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        bshard = sharding.batch_shardings(cfg, mesh, specs)
+        B = shape.global_batch
+        out_spec = sharding.resolve(("batch", None, "vocab"),
+                                    (B, 1, cfg.vocab), mesh)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                         out_shardings=NamedSharding(mesh, out_spec))
+        with mesh, sharding.use_activation_mesh(mesh):
+            lowered = jitted.lower(pshapes, specs)
+        return lowered, {"step": "prefill_step"}, mesh, cfg
+
+    # decode
+    step = make_serve_step(cfg, sample=True)
+    cache_spec = specs["cache"]
+    cshard = sharding.cache_shardings(cfg, mesh, cache_spec)
+    B = shape.global_batch
+    tok_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_shard = NamedSharding(
+        mesh, sharding.resolve(("batch", None), (B, 1), mesh))
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    key_shard = sharding.scalar_sharding(mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, cshard, tok_shard, key_shard),
+        out_shardings=(tok_shard, cshard),
+        donate_argnums=(1,))
+    with mesh, sharding.use_activation_mesh(mesh):
+        lowered = jitted.lower(pshapes, cache_spec, tok_spec, key_spec)
+    return lowered, {"step": "serve_step"}, mesh, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save_hlo: bool = False, overrides: Optional[Dict] = None,
+             tag: str = "") -> Dict:
+    mesh_name = "multi" if multi_pod else "single"
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+           "kind": shape.kind, "tag": tag}
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+    try:
+        t0 = time.perf_counter()
+        lowered, meta, mesh, cfg2 = lower_cell(arch, shape_name, multi_pod,
+                                               overrides)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        n_dev = mesh.size
+        hlo = compiled.as_text()
+        stats = hlo_analysis.analyze(hlo, n_dev)
+        rec.update(meta)
+        rec.update({
+            "status": "ok",
+            "n_devices": n_dev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": _mem_stats(compiled),
+            "cost": _cost_stats(compiled),
+            "hlo_walk": hlo_analysis.summarize(stats),
+            "model_params": api.param_count(cfg2),
+            "active_params": api.active_param_count(cfg2),
+            "hlo_len": len(hlo),
+        })
+        if save_hlo:
+            os.makedirs(ARTIFACT_DIR, exist_ok=True)
+            p = os.path.join(
+                ARTIFACT_DIR,
+                f"{arch}__{shape_name}__{mesh_name}{tag}.hlo.txt.gz")
+            with gzip.open(p, "wt") as f:
+                f.write(hlo)
+            rec["hlo_path"] = p
+    except Exception as e:  # a failing cell is a bug — record loudly
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def lower_stencil_cell(multi_pod: bool, grid_n: int = 1024,
+                       overlap: bool = True, time_steps: int = 1):
+    """The paper-side cell: acoustic-ISO time step(s), domain-decomposed
+    over the production mesh (1024³ f32 grid).  Proves the halo-exchange
+    distribution lowers + compiles at pod scale; the XLA inner lowering
+    stands in for the Pallas templates (same halo traffic — interpret-mode
+    Pallas cannot compile for the CPU target).  ``time_steps`` > 1 lowers
+    the overlapped-tiling (time-skewed) variant: k steps per exchange."""
+    from repro.core import acoustic, distributed as dist, dsl as st
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    k = acoustic.acoustic_iso_kernel
+    grid_axes = ("pod", "data", "model") if multi_pod \
+        else ("data", "model", None)
+    if time_steps > 1:
+        backend = st.distributed(grid_axes=grid_axes, overlap=False,
+                                 time_steps=time_steps, swap=("p0", "p1"))
+    else:
+        backend = st.distributed(grid_axes=grid_axes, overlap=overlap)
+    shape = (grid_n,) * 3
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    with sharding.use_activation_mesh(mesh):
+        fn = dist.lower_distributed(k.ir, halos, shape, None, backend, mesh)
+        interiors = {g: jax.ShapeDtypeStruct(shape, jnp.float32)
+                     for g in k.ir.grid_params}
+        scal = {"dt": jax.ShapeDtypeStruct((), jnp.float32)}
+        lowered = fn.jitted.lower(interiors, scal)
+    return lowered, {"step": "stencil_step", "overlap": overlap,
+                     "time_steps": time_steps, "grid": shape}, mesh
+
+
+def run_stencil_cell(multi_pod: bool, grid_n: int = 1024,
+                     overlap: bool = True, tag: str = "",
+                     save_hlo: bool = False, time_steps: int = 1) -> Dict:
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": f"acoustic-iso-{grid_n}", "shape": "one_step",
+           "mesh": mesh_name, "seq_len": grid_n, "global_batch": 1,
+           "kind": "stencil", "tag": tag}
+    try:
+        t0 = time.perf_counter()
+        lowered, meta, mesh = lower_stencil_cell(multi_pod, grid_n, overlap,
+                                                 time_steps)
+        t_lower = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0
+        hlo = compiled.as_text()
+        stats = hlo_analysis.analyze(hlo, mesh.size)
+        from repro.core import acoustic
+        k = acoustic.acoustic_iso_kernel
+        rec.update(meta)
+        rec.update({
+            "status": "ok", "n_devices": mesh.size,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+            "memory": _mem_stats(compiled), "cost": _cost_stats(compiled),
+            "hlo_walk": hlo_analysis.summarize(stats),
+            "stencil_flops_per_point": k.info.flops_per_point,
+            "hlo_len": len(hlo),
+        })
+        if save_hlo:
+            os.makedirs(ARTIFACT_DIR, exist_ok=True)
+            p = os.path.join(ARTIFACT_DIR,
+                             f"{rec['arch']}__one_step__{mesh_name}{tag}"
+                             f".hlo.txt.gz")
+            with gzip.open(p, "wt") as f:
+                f.write(hlo)
+            rec["hlo_path"] = p
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id, 'all', or 'acoustic-iso' (stencil cell)")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None, help="output JSON path")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records = []
+    if args.arch == "acoustic-iso":
+        for multi in meshes:
+            for overlap in (True, False):
+                rec = run_stencil_cell(multi, overlap=overlap,
+                                       tag="" if overlap else "-no-overlap",
+                                       save_hlo=args.save_hlo)
+                records.append(rec)
+                hw = rec.get("hlo_walk") or {}
+                print(f"[{rec['status']:7s}] {rec['arch']:18s} "
+                      f"overlap={overlap} {rec['mesh']:6s} "
+                      f"compile={rec.get('compile_s', '-'):>8} "
+                      f"mem/dev={_fmt_bytes((rec.get('memory') or {}).get('per_device_total_bytes')):>9} "
+                      f"flops/dev={_fmt(hw.get('total_flops')):>10} "
+                      f"coll/dev={_fmt_bytes(hw.get('total_collective_bytes')):>9} "
+                      f"{rec.get('error', '')}", flush=True)
+        archs = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                rec = run_cell(arch, shape, multi, save_hlo=args.save_hlo)
+                records.append(rec)
+                mem = (rec.get("memory") or {}).get("per_device_total_bytes")
+                flops = (rec.get("hlo_walk") or {}).get("total_flops")
+                col = (rec.get("hlo_walk") or {}).get(
+                    "total_collective_bytes")
+                print(f"[{rec['status']:7s}] {arch:18s} {shape:12s} "
+                      f"{rec['mesh']:6s} "
+                      f"lower={rec.get('lower_s', '-'):>7} "
+                      f"compile={rec.get('compile_s', '-'):>8} "
+                      f"mem/dev={_fmt_bytes(mem):>9} "
+                      f"flops/dev={_fmt(flops):>10} "
+                      f"coll/dev={_fmt_bytes(col):>9} "
+                      f"{rec.get('reason', '') or rec.get('error', '')}",
+                      flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(r["status"] == "error" for r in records)
+    print(f"{len(records)} cells: "
+          f"{sum(r['status'] == 'ok' for r in records)} ok, "
+          f"{sum(r['status'] == 'skipped' for r in records)} skipped, "
+          f"{n_err} errors")
+    return 1 if n_err else 0
+
+
+def _fmt(x):
+    if x is None:
+        return "-"
+    for unit in ("", "K", "M", "G", "T", "P", "E"):
+        if abs(x) < 1000:
+            return f"{x:.1f}{unit}"
+        x /= 1000
+    return f"{x:.1f}Z"
+
+
+def _fmt_bytes(x):
+    if x is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(x) < 1024:
+            return f"{x:.1f}{unit}"
+        x /= 1024
+    return f"{x:.1f}PB"
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization; smoke tests and benches keep the default single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod (data=16, model=16) = 256 chips; multi-pod adds a
+    leading pod axis: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh for single-device smoke runs."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

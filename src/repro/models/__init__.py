@@ -1,0 +1,1 @@
+"""LM model substrate: family backbones + the dispatching api module."""

@@ -1,0 +1,145 @@
+"""Family-dispatching model API: init / forward / loss / decode / caches.
+
+This is the single entry point the training stack, serving stack, dry-run
+and tests use; ``cfg.family`` picks the backbone module.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from . import encdec, griffin, layers as L, transformer, xlstm
+
+_FAMILY = {"dense": transformer, "moe": transformer, "vlm": transformer,
+           "hybrid": griffin, "ssm": xlstm, "audio": encdec}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    return module_for(cfg).init_params(key, cfg)
+
+
+def param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    total = 0
+    for l in jax.tree.leaves(param_shapes(cfg)):
+        n = 1
+        for s in l.shape:
+            n *= int(s)
+        total += n
+    return total
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: experts count at top_k/E; everything else fully active."""
+    total = 0
+    shapes = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= int(s)
+        keys = "/".join(str(p) for p in path)
+        if cfg.moe and "moe" in keys and "router" not in keys:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total
+
+
+def forward_hidden(cfg: ModelConfig, params, batch: Dict):
+    """→ (hidden_for_logits [B, S_tok, D], aux_loss)."""
+    mod = module_for(cfg)
+    if cfg.family == "audio":
+        return mod.forward(params, batch, cfg)
+    prefix = batch.get("patch_embeds")
+    hid, aux = mod.forward(params, batch["tokens"], cfg, prefix_embeds=prefix)
+    if prefix is not None:
+        hid = hid[:, prefix.shape[1]:]
+    return hid, aux
+
+
+def _ce_from_logits(logits, labels):
+    """Mean token cross-entropy, f32 logsumexp."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return (lse - picked).mean()
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict):
+    """→ (loss, metrics).  Vocab-heavy configs use sequence-chunked CE so
+    the [B,S,V] logits never materialize (cfg.logits_chunk)."""
+    hid, aux = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    embed_p = params["embed"]
+
+    if cfg.logits_chunk:
+        C = cfg.logits_chunk
+        B, S, D = hid.shape
+        pad = (-S) % C
+        if pad:
+            hid = jnp.pad(hid, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=0)
+        n = hid.shape[1] // C
+        hc = constrain(hid.reshape(B, n, C, D).swapaxes(0, 1),
+                       None, "batch", None, "embed")
+        yc = labels.reshape(B, n, C).swapaxes(0, 1)
+        valid = (jnp.arange(hid.shape[1]) < S).reshape(n, C)
+
+        @jax.checkpoint
+        def chunk_loss(h, y, v):
+            logits = L.unembed(embed_p, h, cfg).astype(jnp.float32)
+            logits = constrain(logits, "batch", None, "vocab")
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+            return ((lse - picked) * v[None]).sum()
+
+        def scan_body(tot, xs):
+            h, y, v = xs
+            return tot + chunk_loss(h, y, v), None
+
+        total, _ = lax.scan(scan_body, jnp.float32(0.0), (hc, yc, valid))
+        ce = total / (B * S)
+    else:
+        logits = L.unembed(embed_p, hid, cfg)
+        ce = _ce_from_logits(logits, labels)
+
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# -- decode ------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, **kw):
+    return module_for(cfg).init_cache(cfg, batch, cache_len, **kw)
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, **kw):
+    return module_for(cfg).cache_spec(cfg, batch, cache_len, **kw)
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    return module_for(cfg).decode_step(params, cache, tokens, cfg)
+
+
+def decode_cache_len(cfg: ModelConfig, context_len: int) -> int:
+    """Rolling-buffer size: SWA archs bound it by the window."""
+    if cfg.family == "hybrid":
+        return min(cfg.local_window or context_len, context_len)
+    if cfg.family == "ssm":
+        return 0
+    if cfg.window:
+        return min(cfg.window, context_len)
+    return context_len

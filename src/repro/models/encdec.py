@@ -1,0 +1,172 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+Per the assignment the conv/mel frontend is a STUB: ``input_specs`` provides
+precomputed frame embeddings [B, T_enc, D] (kernels/conv1d demonstrates the
+real strided-conv op as a generated 1-D stencil).  Encoder = bidirectional
+attention; decoder = causal self-attention + cross-attention; GELU MLPs,
+LayerNorm, learned positions replaced by RoPE (backbone shape params only
+are mandated; noted in DESIGN.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+
+
+def _init_enc_layer(key, cfg):
+    ks = jax.random.split(key, 2)
+    return {"ln1": L.init_norm(cfg.d_model, cfg),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": L.init_norm(cfg.d_model, cfg),
+            "mlp": L.init_mlp(ks[1], cfg)}
+
+
+def _init_dec_layer(key, cfg):
+    ks = jax.random.split(key, 3)
+    return {"ln1": L.init_norm(cfg.d_model, cfg),
+            "attn": L.init_attention(ks[0], cfg),
+            "lnx": L.init_norm(cfg.d_model, cfg),
+            "xattn": L.init_attention(ks[1], cfg),
+            "ln2": L.init_norm(cfg.d_model, cfg),
+            "mlp": L.init_mlp(ks[2], cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    ek = jax.random.split(ks[0], cfg.n_enc_layers)
+    dk = jax.random.split(ks[1], cfg.n_dec_layers)
+    return {
+        "embed": L.init_embedding(ks[2], cfg),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(ek),
+        "enc_norm": L.init_norm(cfg.d_model, cfg),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dk),
+        "final_norm": L.init_norm(cfg.d_model, cfg),
+    }
+
+
+def encode(params, frame_embeds, cfg: ModelConfig):
+    """frame_embeds: [B, T, D] (stub frontend output)."""
+    x = frame_embeds.astype(L.cdtype(cfg))
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(lp, x):
+        h, _ = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), cfg,
+                           mode="bidir", positions=pos)
+        x = x + h
+        return x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
+
+    body = L.remat_wrap(cfg)(body)
+
+    def scan_body(x, lp):
+        return body(lp, x), None
+
+    x, _ = lax.scan(scan_body, x, params["enc_layers"])
+    return L.norm(params["enc_norm"], x, cfg)
+
+
+def _cross_kv(lp, enc_out, cfg):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhk->bthk", enc_out, lp["xattn"]["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", enc_out, lp["xattn"]["wv"].astype(dt))
+    return k, v
+
+
+def decode_train(params, enc_out, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    T = enc_out.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(lp, x):
+        h, _ = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), cfg,
+                           mode="causal", positions=pos)
+        x = x + h
+        kv = _cross_kv(lp, enc_out, cfg)
+        h, _ = L.attention(lp["xattn"], L.norm(lp["lnx"], x, cfg), cfg,
+                           positions=pos, kv=kv, kv_positions=kv_pos)
+        x = x + h
+        return x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
+
+    body = L.remat_wrap(cfg)(body)
+
+    def scan_body(x, lp):
+        return body(lp, x), None
+
+    x, _ = lax.scan(scan_body, x, params["dec_layers"])
+    return L.norm(params["final_norm"], x, cfg)
+
+
+def forward(params, batch: Dict, cfg: ModelConfig):
+    """batch: {'frame_embeds': [B,T,D], 'tokens': [B,S]} → (hidden, aux)."""
+    enc = encode(params, batch["frame_embeds"], cfg)
+    hid = decode_train(params, enc, batch["tokens"], cfg)
+    return hid, jnp.float32(0.0)
+
+
+# -- decode with cache --------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 1500):
+    dt = L.cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    Ld = cfg.n_dec_layers
+    return {
+        "kv": {"k": jnp.zeros((Ld, batch, cache_len, cfg.n_kv_heads, hd), dt),
+               "v": jnp.zeros((Ld, batch, cache_len, cfg.n_kv_heads, hd), dt)},
+        "xk": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dt),
+        "xv": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int, enc_len: int = 1500):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, cache_len, enc_len))
+
+
+def build_cache(params, enc_out, cfg: ModelConfig, batch: int, cache_len: int):
+    """Precompute per-layer cross K/V from encoder output."""
+    cache = init_cache(cfg, batch, cache_len, enc_out.shape[1])
+
+    def per_layer(lp):
+        return _cross_kv(lp, enc_out, cfg)
+
+    xk, xv = jax.vmap(per_layer)(params["dec_layers"])
+    dt = L.cdtype(cfg)
+    return dict(cache, xk=xk.astype(dt), xv=xv.astype(dt))
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32), (B, S))
+    T = cache["xk"].shape[2]
+    kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def scan_body(x, lpkv):
+        lp, k, v, xk, xv = lpkv
+        lcache = {"k": k, "v": v, "pos": pos}
+        h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), cfg,
+                            mode="causal", positions=positions, cache=lcache)
+        x = x + h
+        h, _ = L.attention(lp["xattn"], L.norm(lp["lnx"], x, cfg), cfg,
+                           positions=positions, kv=(xk, xv),
+                           kv_positions=kv_pos)
+        x = x + h
+        x = x + L.mlp(lp["mlp"], L.norm(lp["ln2"], x, cfg), cfg)
+        return x, (nc["k"], nc["v"])
+
+    x, (k2, v2) = lax.scan(scan_body, x,
+                           (params["dec_layers"], cache["kv"]["k"],
+                            cache["kv"]["v"], cache["xk"], cache["xv"]))
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, dict(cache, kv={"k": k2, "v": v2}, pos=pos + S)

@@ -1,0 +1,378 @@
+"""Shared LM layers, functional style (params are plain pytrees of arrays).
+
+Conventions
+-----------
+* ``init_*`` functions return dicts of ``jax.ShapeDtypeStruct``-compatible
+  arrays when given a PRNG key, or pure shape trees via ``jax.eval_shape``.
+* Activations run in ``cfg.dtype`` (bf16); params are stored in
+  ``cfg.param_dtype`` (fp32 master) and cast at use.
+* Attention supports GQA/MQA, causal/bidirectional/sliding-window masks,
+  optional blockwise-KV online-softmax (``cfg.attn_chunk``) and KV-cache
+  decode (full cache or rolling window buffer).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain, kv_cache_mode
+
+
+def remat_wrap(cfg: ModelConfig):
+    """Layer-body remat transform per cfg: 'full' recomputes everything in
+    the backward pass (min memory, max recompute + re-all-gather of FSDP
+    weights); 'dots' saves matmul outputs (no matmul recompute ⇒ no second
+    FSDP weight gather in bwd, at higher activation memory)."""
+    if not cfg.remat:
+        return lambda f: f
+    if cfg.remat_policy == "dots":
+        return partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _split(key, n):
+    return jax.random.split(key, n)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (s * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def init_rmsnorm(d, cfg):
+    return {"scale": jnp.ones((d,), pdtype(cfg))}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    """Variance reduction in f32, but the x-path multiply stays in the
+    input dtype — otherwise the f32 cast boundary sits between the layer's
+    einsums and the TP backward all-reduce and XLA hoists the convert
+    before the collective, doubling its bytes (observed: 600 GB/step of
+    f32 ARs on mixtral train; §Perf pair-1 iteration 3)."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    inv = lax.rsqrt(var + eps).astype(dt)
+    return x * inv * p["scale"].astype(dt)
+
+
+def init_layernorm(d, cfg):
+    return {"scale": jnp.ones((d,), pdtype(cfg)),
+            "bias": jnp.zeros((d,), pdtype(cfg))}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    inv = lax.rsqrt(var + eps).astype(dt)
+    out = (x - mu.astype(dt)) * inv
+    return out * p["scale"].astype(dt) + p["bias"].astype(dt)
+
+
+def init_norm(d, cfg):
+    return init_rmsnorm(d, cfg) if cfg.norm == "rmsnorm" else init_layernorm(d, cfg)
+
+
+def norm(p, x, cfg):
+    return rmsnorm(p, x) if cfg.norm == "rmsnorm" else layernorm(p, x)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freq  # [...,S,1,half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd = cfg.resolved_head_dim
+    dt = pdtype(cfg)
+    ks = _split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, cfg.n_heads, hd), dt),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads, hd), dt),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads, hd), dt),
+        "wo": dense_init(ks[3], (cfg.n_heads, hd, d), dt,
+                         scale=(cfg.n_heads * hd) ** -0.5),
+    }
+
+
+def _mask(q_pos, k_pos, mode: str, window: Optional[int]):
+    """[..., Sq, Sk] boolean mask. q_pos/k_pos: [..., S] int32."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if mode == "bidir":
+        m = kp >= 0
+    else:
+        # kp >= 0 also masks never-written cache slots / chunk padding
+        m = (kp <= qp) & (kp >= 0)
+    if window is not None:
+        m = m & (kp > qp - window)
+    return m
+
+
+def _expand_kv(k, H: int):
+    """GQA: repeat KV heads to H query heads (keeps the head dim intact so
+    tensor parallelism shards 'heads' end-to-end with no resharding —
+    q heads [g·G, g·G+G) map to kv head g, the standard grouping)."""
+    K = k.shape[2]
+    if K == H:
+        return k
+    return jnp.repeat(k, H // K, axis=2)
+
+
+def _sdpa(q, k, v, mask, scale, kv_mode=None):
+    """q:[B,Sq,H,D] k,v:[B,Sk,K,D] mask:[B,1,Sq,Sk] → [B,Sq,H,D].
+
+    Training path expands KV to H heads (keeps the head dim intact for
+    tensor parallelism).  Decode paths (``kv_mode`` set) use the grouped
+    form instead — expanding a 32k-token cache 4× per layer would dominate
+    decode HBM traffic; the tiny q reshape is free:
+
+    ``kv_mode='seq'``: the KV cache's sequence dim is 'model'-sharded;
+    logits keep it sharded and softmax lowers to partial max/sum + tiny
+    all-reduces instead of gathering the cache.
+    ``kv_mode='heads'``: kv_heads divide the model axis; grouped einsums
+    shard on the K dim end-to-end."""
+    B, Sq, H, D = q.shape
+    if kv_mode is None:
+        k = _expand_kv(k, H)
+        v = _expand_kv(v, H)
+        logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+        logits = constrain(logits * scale, "batch", "heads")
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", probs.astype(v.dtype), v)
+
+    K = k.shape[2]
+    qg = q.reshape(B, Sq, K, H // K, D)
+    if kv_mode == "seq":
+        k = constrain(k, "batch", "kv_seq", None, "head_dim")
+        v = constrain(v, "batch", "kv_seq", None, "head_dim")
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits = logits * scale
+    if kv_mode == "seq":
+        logits = constrain(logits, "batch", None, None, None, "kv_seq")
+    else:
+        logits = constrain(logits, "batch", "kv_heads")
+    logits = jnp.where(mask[:, :, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, mode, window, scale, chunk):
+    """Blockwise-KV online-softmax attention (flash-style in pure JAX):
+    peak memory O(Sq·chunk) instead of O(Sq·Sk)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    nch = -(-Sk // chunk)
+    pad = nch * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-(10 ** 9))
+    kc = k.reshape(B, nch, chunk, H, D).swapaxes(0, 1)
+    vc = v.reshape(B, nch, chunk, H, D).swapaxes(0, 1)
+    pc = k_pos.reshape(B, nch, chunk).swapaxes(0, 1)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kb, vb, pb = xs
+        logits = jnp.einsum("bqhd,bshd->bhqs", q, kb).astype(jnp.float32)
+        logits = logits * scale
+        logits = constrain(logits, "batch", "heads")
+        msk = _mask(q_pos, pb, mode, window)  # [B, Sq, chunk]
+        logits = jnp.where(msk[:, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(vb.dtype), vb)
+        acc = acc * corr[..., None].astype(acc.dtype) + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, H, Sq, D), v.dtype)
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    (acc, m, l), _ = lax.scan(step, (acc0, m0, l0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+    return out.transpose(0, 2, 1, 3)
+
+
+def attention(p, x, cfg: ModelConfig, *,
+              mode: str = "causal",
+              window: Optional[int] = None,
+              positions: Optional[jnp.ndarray] = None,
+              kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+              kv_positions: Optional[jnp.ndarray] = None,
+              cache: Optional[Dict] = None):
+    """Self- or cross-attention.
+
+    ``kv``       : precomputed (k, v) for cross-attention (whisper decoder).
+    ``cache``    : {'k','v' [B,Sc,K,D], 'pos' scalar} decode-time KV cache —
+                   writes the new token at ``pos % Sc`` (rolling buffer: for
+                   SWA the cache is window-sized; for full attention it is
+                   context-sized so the modulo never wraps).
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    scale = hd ** -0.5
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    q = rope(q, positions, cfg.rope_theta) if kv is None else q
+
+    new_cache = None
+    if kv is not None:                     # cross-attention
+        k, v = kv
+        k_pos = kv_positions
+        mode_eff, win = "bidir", None
+    elif cache is not None:                # decode with KV cache
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+        k_new = rope(k_new, positions, cfg.rope_theta)
+        Sc = cache["k"].shape[1]
+        slot = (cache["pos"] % Sc).astype(jnp.int32)
+        k = lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v = lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+        kvm = kv_cache_mode(cfg)
+        if kvm == "seq":
+            # keep the updated cache seq-sharded (the DUS must not gather)
+            k = constrain(k, "batch", "kv_seq", None, "head_dim")
+            v = constrain(v, "batch", "kv_seq", None, "head_dim")
+        # cache slot i holds absolute position: reconstruct from pos
+        idx = jnp.arange(Sc, dtype=jnp.int32)
+        pos_now = cache["pos"].astype(jnp.int32)
+        # absolute position stored in slot i (only valid if <= pos_now)
+        abs_pos = pos_now - ((pos_now % Sc) - idx) % Sc
+        k_pos = jnp.broadcast_to(abs_pos, (B, Sc))
+        new_cache = {"k": k, "v": v, "pos": cache["pos"] + S}
+        mode_eff, win = mode, window
+    else:                                  # full-sequence self-attention
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+        k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+        v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+        k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+        mode_eff, win = mode, window
+
+    if cfg.attn_chunk and cache is None:
+        out = _sdpa_chunked(q, k.astype(dt), v.astype(dt), positions, k_pos,
+                            mode_eff, win, scale, cfg.attn_chunk)
+    else:
+        msk = _mask(positions, k_pos, mode_eff, win)[:, None]
+        out = _sdpa(q, k.astype(dt), v.astype(dt), msk, scale,
+                    kv_mode=kv_cache_mode(cfg) if cache is not None
+                    else None)
+
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed"), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    dt = pdtype(cfg)
+    ks = _split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wg": dense_init(ks[0], (d, cfg.d_ff), dt),
+                "wu": dense_init(ks[1], (d, cfg.d_ff), dt),
+                "wo": dense_init(ks[2], (cfg.d_ff, d), dt,
+                                 scale=cfg.d_ff ** -0.5)}
+    return {"wi": dense_init(ks[0], (d, cfg.d_ff), dt),
+            "wo": dense_init(ks[1], (cfg.d_ff, d), dt,
+                             scale=cfg.d_ff ** -0.5)}
+
+
+def mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dt))
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(dt))
+        g = constrain(g, "batch", "seq", "ff")
+        u = constrain(u, "batch", "seq", "ff")
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dt))
+        h = constrain(h, "batch", "seq", "ff")
+        if cfg.act == "sqrelu":
+            r = jax.nn.relu(h)
+            h = r * r
+        else:
+            h = jax.nn.gelu(h)
+    out = jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dt))
+    return constrain(out, "batch", "seq", "embed")
+
+
+# --------------------------------------------------------------------------
+# embeddings / unembedding
+# --------------------------------------------------------------------------
+def init_embedding(key, cfg: ModelConfig):
+    dt = pdtype(cfg)
+    ks = _split(key, 2)
+    p = {"tok": dense_init(ks[0], (cfg.vocab, cfg.d_model), dt, scale=1.0)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    out = p["tok"].astype(cdtype(cfg))[tokens]
+    return constrain(out, "batch", "seq", "embed")
+
+
+def unembed(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        # tied table is unit-scale; normalize logits by 1/sqrt(d) (gemma-
+        # style) so init CE ≈ ln(vocab)
+        w = p["tok"].astype(dt).T * (cfg.d_model ** -0.5)
+    else:
+        w = p["out"].astype(dt)
+    out = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(out, "batch", "seq", "vocab")

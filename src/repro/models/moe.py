@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN (Mixtral-style top-k routing, GShard capacity
+dispatch).
+
+Tokens are grouped (``moe.group_size``) and dispatched to expert buffers via
+cumsum-assigned positions + one-hot einsums — shape-static, GSPMD-friendly,
+with dispatch FLOPs ≪ expert FLOPs for realistic group sizes.  Tokens beyond
+an expert's capacity are dropped (capacity_factor 1.25, as GShard).
+
+Sharding: experts' d_ff is tensor-parallel over 'model'; expert weights are
+additionally FSDP-sharded over 'data' on d_model.  (True expert-parallelism
+over a dedicated mesh axis needs n_experts | axis size — with E=8 on a
+16-wide model axis we TP instead; see DESIGN.md §6 and the §Perf EP
+experiment.)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import dense_init, pdtype, _split
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.n_experts
+    dt = pdtype(cfg)
+    ks = _split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, E), dt),
+        "wg": dense_init(ks[1], (E, d, f), dt),
+        "wu": dense_init(ks[2], (E, d, f), dt),
+        "wo": dense_init(ks[3], (E, f, d), dt, scale=f ** -0.5),
+    }
+
+
+def moe_ffn(p, x, cfg: ModelConfig,
+            dropless: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] → (out [B, S, D], aux_loss scalar).
+
+    ``dropless=True`` sets capacity C = G·K (no token ever dropped) — used
+    by the decode path so single-token routing matches training routing
+    exactly regardless of grouping (GShard capacity dropping is otherwise
+    grouping-dependent)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.n_experts, m.top_k
+    dt = x.dtype
+
+    T = B * S
+    G = max(1, min(m.group_size, T))
+    n_groups = T // G
+    # group size must divide tokens; configs pick group_size | B·S.
+    # the group dim carries the batch dim's sharding (n_groups % dp == 0
+    # for the assigned shapes)
+    xg = constrain(x.reshape(n_groups, G, D), "batch", None, None)
+
+    logits = jnp.einsum("ngd,de->nge", xg, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)          # [n, G, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    me = probs.mean(axis=(0, 1))                            # [E]
+    ce = jax.nn.one_hot(gate_idx[..., 0], E).mean(axis=(0, 1))
+    aux = m.aux_loss_weight * E * jnp.sum(me * ce)
+
+    if dropless:
+        C = G * K
+    else:
+        C = int(m.capacity_factor * G * K / E + 0.5)
+    C = max(C, 1)
+
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # [n,G,K,E]
+    # position of each (token, k) inside its expert buffer
+    pos = jnp.cumsum(onehot.reshape(n_groups, G * K, E), axis=1) - 1.0
+    pos = pos.reshape(n_groups, G, K, E)
+    within = (pos < C) & (onehot > 0)
+    pos = jnp.where(within, pos, 0.0).astype(jnp.int32)
+
+    # dispatch one-hot [n, G, E, C] (summed over the K routing slots)
+    disp = (jax.nn.one_hot(pos, C, dtype=dt)
+            * within[..., None].astype(dt)).sum(axis=2)
+    expert_in = jnp.einsum("ngec,ngd->encd", disp, xg)      # [E, n, C, D]
+    expert_in = constrain(expert_in, "experts", "batch", None, None)
+
+    g = jnp.einsum("encd,edf->encf", expert_in, p["wg"].astype(dt))
+    u = jnp.einsum("encd,edf->encf", expert_in, p["wu"].astype(dt))
+    g = constrain(g, "experts", "batch", None, "ff")
+    u = constrain(u, "experts", "batch", None, "ff")
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("encf,efd->encd", h, p["wo"].astype(dt))
+    expert_out = constrain(expert_out, "experts", "batch", None, None)
+
+    # combine weights [n, G, E, C]: the gate value where dispatched
+    comb = (jax.nn.one_hot(pos, C, dtype=jnp.float32)
+            * (gate_vals[..., None] * within.astype(jnp.float32))[..., None])
+    comb = comb.sum(axis=2).astype(dt)
+    out = jnp.einsum("ngec,encd->ngd", comb, expert_out)
+    return out.reshape(B, S, D), aux.astype(jnp.float32)

@@ -1,0 +1,179 @@
+"""Decoder-only transformer LM (dense / MoE / SWA / VLM-prefix variants).
+
+Scan-over-layers with stacked params (compile-size hygiene for 32–56 layer
+configs), optional per-layer remat, GQA attention with sliding window,
+MoE FFN, and a decode path over a (rolling-buffer) KV cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .moe import init_moe, moe_ffn
+
+
+def init_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p = {"ln1": L.init_norm(cfg.d_model, cfg),
+         "attn": L.init_attention(ks[0], cfg),
+         "ln2": L.init_norm(cfg.d_model, cfg)}
+    if cfg.moe:
+        p["moe"] = init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    return {"embed": L.init_embedding(ks[1], cfg),
+            "layers": stacked,
+            "final_norm": L.init_norm(cfg.d_model, cfg)}
+
+
+def _layer_fwd(lp, x, cfg: ModelConfig, positions):
+    h, _ = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), cfg,
+                       mode="causal", window=cfg.window, positions=positions)
+    x = x + h
+    hin = L.norm(lp["ln2"], x, cfg)
+    if cfg.moe:
+        h, aux = moe_ffn(lp["moe"], hin, cfg)
+    else:
+        h, aux = L.mlp(lp["mlp"], hin, cfg), jnp.float32(0.0)
+    return x + h, aux
+
+
+def forward(params, tokens, cfg: ModelConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None):
+    """tokens: [B, S] int32; prefix_embeds: [B, P, D] (VLM patch stub).
+    Returns (hidden [B, S_total, D], aux_loss)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    body = partial(_layer_fwd, cfg=cfg, positions=positions)
+    body = L.remat_wrap(cfg)(body)
+
+    if cfg.scan_layers:
+        def scan_body(carry, lp):
+            x, aux = carry
+            x, a = body(lp, x)
+            return (x, aux + a), None
+        (x, aux), _ = lax.scan(scan_body, (x, jnp.float32(0.0)),
+                               params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body(lp, x)
+            aux = aux + a
+
+    x = L.norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def logits_from_hidden(params, hidden, cfg: ModelConfig):
+    return L.unembed(params["embed"], hidden, cfg)
+
+
+# --------------------------------------------------------------------------
+# decode path (one new token against a KV cache)
+# --------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None):
+    """Rolling-buffer KV cache.  For SWA archs cache_len=window (bounded);
+    for full attention cache_len=context."""
+    dt = dtype or L.cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    kv = {"k": jnp.zeros((cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dt),
+          "v": jnp.zeros((cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dt)}
+    return {"kv": kv, "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    hd = cfg.resolved_head_dim
+    dt = L.cdtype(cfg)
+    return {"kv": {"k": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dt),
+                   "v": jax.ShapeDtypeStruct(
+                       (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, hd), dt)},
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """tokens: [B, 1] — decode one token.  Returns (logits [B,1,V], cache')."""
+    x = L.embed(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos + jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def scan_body(x, lpkv):
+        lp, k, v = lpkv
+        lcache = {"k": k, "v": v, "pos": pos}
+        h, nc = L.attention(lp["attn"], L.norm(lp["ln1"], x, cfg), cfg,
+                            mode="causal", window=cfg.window,
+                            positions=positions, cache=lcache)
+        x = x + h
+        hin = L.norm(lp["ln2"], x, cfg)
+        if cfg.moe:
+            h, _ = moe_ffn(lp["moe"], hin, cfg, dropless=True)
+        else:
+            h = L.mlp(lp["mlp"], hin, cfg)
+        return x + h, (nc["k"], nc["v"])
+
+    x, (k2, v2) = lax.scan(scan_body, x,
+                           (params["layers"], cache["kv"]["k"],
+                            cache["kv"]["v"]))
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits, {"kv": {"k": k2, "v": v2}, "pos": pos + S}
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: int):
+    """Run the full prompt and build a decode cache (example/serving path)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    dt = L.cdtype(cfg)
+    hd = cfg.resolved_head_dim
+
+    def scan_body(x, lp):
+        xn = L.norm(lp["ln1"], x, cfg)
+        k = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", xn, lp["attn"]["wv"].astype(dt))
+        k = L.rope(k, positions, cfg.rope_theta)
+        h, _ = L.attention(lp["attn"], xn, cfg, mode="causal",
+                           window=cfg.window, positions=positions)
+        x = x + h
+        hin = L.norm(lp["ln2"], x, cfg)
+        if cfg.moe:
+            h, _ = moe_ffn(lp["moe"], hin, cfg)
+        else:
+            h = L.mlp(lp["mlp"], hin, cfg)
+        return x + h, (k, v)
+
+    x, (ks, vs) = lax.scan(scan_body, x, params["layers"])
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(params, x, cfg)
+
+    # place the last cache_len positions into the rolling buffer at the
+    # slots they belong to (slot = pos % cache_len)
+    cache = init_cache(cfg, B, cache_len)
+    take = min(S, cache_len)
+    src_k = ks[:, :, S - take:]
+    src_v = vs[:, :, S - take:]
+    pos = jnp.arange(S - take, S, dtype=jnp.int32)
+    slots = pos % cache_len
+    k0 = cache["kv"]["k"].at[:, :, slots].set(src_k.astype(dt))
+    v0 = cache["kv"]["v"].at[:, :, slots].set(src_v.astype(dt))
+    return logits, {"kv": {"k": k0, "v": v0},
+                    "pos": jnp.int32(S)}

@@ -1,0 +1,360 @@
+"""xLSTM: mLSTM (matrix memory, chunkwise-parallel) + sLSTM (scalar memory,
+sequential scan) blocks [arXiv:2405.04517].
+
+Training uses the chunkwise form of the mLSTM recurrence (linear-attention
+style: inter-chunk state carried by a lax.scan over chunks; intra-chunk
+causal matmul) — O(S·chunk) memory, exact w.r.t. the sequential recurrence
+up to the log-domain stabilizer.  Decode keeps O(1) state per layer
+(C [B,H,dk,dv], n [B,H,dk], m [B,H]) so the 500k-context shape runs.
+
+sLSTM blocks (every ``slstm_every``-th layer) use a sequential lax.scan —
+their exponential-gate normalizer is a true serial dependency.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from . import layers as L
+
+
+def block_types(cfg: ModelConfig):
+    n = cfg.slstm_every or 0
+    return ["slstm" if (n and (i + 1) % n == 0) else "mlstm"
+            for i in range(cfg.n_layers)]
+
+
+def pattern_of(cfg: ModelConfig):
+    """Repeating block cycle: (mlstm ×(k−1), slstm) for slstm_every=k, or
+    a single mlstm.  Cycles are stacked + scanned (compile-size hygiene)."""
+    P = cfg.slstm_every or 1
+    return tuple(block_types(cfg)[:P])
+
+
+def _cycle_split(cfg: ModelConfig):
+    P = len(pattern_of(cfg))
+    return cfg.n_layers // P, cfg.n_layers % P
+
+
+def _heads(cfg):
+    return cfg.n_heads, cfg.resolved_head_dim
+
+
+def init_mlstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": L.init_norm(d, cfg),
+        "wq": L.dense_init(ks[0], (d, H, hd), dt),
+        "wk": L.dense_init(ks[1], (d, H, hd), dt),
+        "wv": L.dense_init(ks[2], (d, H, hd), dt),
+        "wi": L.dense_init(ks[3], (d, H), dt),      # input gate (exp)
+        "wf": L.dense_init(ks[4], (d, H), dt),      # forget gate
+        "bf": jnp.full((H,), 3.0, dt),              # long-memory init
+        "wo_gate": L.dense_init(ks[5], (d, H, hd), dt),
+        "wo": L.dense_init(ks[6], (H, hd, d), dt, scale=(H * hd) ** -0.5),
+    }
+
+
+def init_slstm_block(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "ln": L.init_norm(d, cfg),
+        "wz": L.dense_init(ks[0], (d, H, hd), dt),
+        "wi": L.dense_init(ks[1], (d, H, hd), dt),
+        "wf": L.dense_init(ks[2], (d, H, hd), dt),
+        "wo_gate": L.dense_init(ks[3], (d, H, hd), dt),
+        "bf": jnp.full((H, hd), 3.0, dt),
+        "wo": L.dense_init(ks[4], (H, hd, d), dt, scale=(H * hd) ** -0.5),
+    }
+
+
+def _init_block(key, cfg, t):
+    return init_mlstm_block(key, cfg) if t == "mlstm" \
+        else init_slstm_block(key, cfg)
+
+
+def init_params(key, cfg: ModelConfig):
+    pat = pattern_of(cfg)
+    n_cycles, tail = _cycle_split(cfg)
+    ks = jax.random.split(key, 3)
+
+    def init_cycle(k):
+        kk = jax.random.split(k, len(pat))
+        return {str(p): _init_block(kk[p], cfg, t)
+                for p, t in enumerate(pat)}
+
+    cycles = jax.vmap(init_cycle)(jax.random.split(ks[0], n_cycles)) \
+        if n_cycles else {}
+    tail_keys = jax.random.split(ks[1], max(tail, 1))
+    tail_blocks = [_init_block(tail_keys[p], cfg, pat[p])
+                   for p in range(tail)]
+    return {"embed": L.init_embedding(ks[2], cfg),
+            "cycles": cycles,
+            "tail": tail_blocks,
+            "final_norm": L.init_norm(cfg.d_model, cfg)}
+
+
+# --------------------------------------------------------------------------
+# mLSTM chunkwise
+# --------------------------------------------------------------------------
+def _mlstm_proj(p, xn):
+    dt = xn.dtype
+    q = jnp.einsum("bsd,dhk->bshk", xn, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", xn, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", xn, p["wv"].astype(dt))
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "heads", "head_dim")
+    v = constrain(v, "batch", "seq", "heads", "head_dim")
+    i_pre = jnp.einsum("bsd,dh->bsh", xn, p["wi"].astype(dt)).astype(jnp.float32)
+    f_pre = (jnp.einsum("bsd,dh->bsh", xn, p["wf"].astype(dt))
+             + p["bf"].astype(dt)).astype(jnp.float32)
+    og = jax.nn.sigmoid(
+        jnp.einsum("bsd,dhk->bshk", xn, p["wo_gate"].astype(dt)))
+    return q, k, v, i_pre, f_pre, og
+
+
+def mlstm_chunkwise(p, x, cfg: ModelConfig):
+    """x: [B,S,D] → [B,S,D]; chunk = cfg.chunk (S % chunk == 0 assumed
+    after padding)."""
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    xn = L.norm(p["ln"], x, cfg)
+    C = min(cfg.chunk, S)
+    pad = (-S) % C
+    if pad:
+        xn = jnp.pad(xn, ((0, 0), (0, pad), (0, 0)))
+    Sp = xn.shape[1]
+    n_ch = Sp // C
+
+    q, k, v, i_pre, f_pre, og = _mlstm_proj(p, xn)
+    scale = hd ** -0.5
+    logf = jax.nn.log_sigmoid(f_pre)                 # [B,Sp,H]
+
+    def resh(a):
+        return a.reshape(B, n_ch, C, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = resh(q), resh(k), resh(v)
+    ic, fc = resh(i_pre), resh(logf)
+
+    def chunk_step(carry, xs):
+        # Carried state is stabilized: true_C = Cst · exp(mst).
+        Cst, nst, mst = carry          # [B,H,hd,hd], [B,H,hd], [B,H]
+        qb, kb, vb, ib, fb = xs        # [B,C,...]
+        fcum = jnp.cumsum(fb, axis=1)                    # [B,C,H] Σ_{r≤t}logf
+        ftot = fcum[:, -1]                               # [B,H]
+        g = ib - fcum                                    # i_s − fcum_s
+        b = lax.cummax(g, axis=1)                        # running max over s≤t
+        Mt = jnp.maximum(mst[:, None], b)                # [B,C,H]
+        m_t = fcum + Mt                                  # per-t stabilizer
+        # inter-chunk: q_t reads prev state decayed by exp(fcum_t)
+        w_state = jnp.exp(mst[:, None] - Mt)             # ≤ 1
+        inter = jnp.einsum("bchk,bhkl->bchl", qb * scale,
+                           Cst.astype(qb.dtype))
+        inter = inter * w_state[..., None].astype(qb.dtype)
+        n_inter = jnp.einsum("bchk,bhk->bch",
+                             (qb * scale).astype(jnp.float32), nst) * w_state
+        # intra-chunk causal: weight(t,s) = exp(g_s − Mt_t) for s ≤ t
+        dmat = g[:, None] - Mt[:, :, None]               # [B,t,s,H]
+        causal = jnp.tril(jnp.ones((C, C), bool))
+        wmat = jnp.where(causal[None, :, :, None], jnp.exp(dmat), 0.0)
+        scores = jnp.einsum("bchk,bshk->bcsh", qb * scale, kb)
+        sw = scores.astype(jnp.float32) * wmat
+        intra = jnp.einsum("bcsh,bshl->bchl", sw.astype(vb.dtype), vb)
+        n_intra = sw.sum(axis=2)                         # [B,C,H]
+        num = inter + intra
+        den = jnp.abs(n_inter + n_intra)
+        den = jnp.maximum(den, jnp.exp(-m_t))
+        out = num / den[..., None].astype(num.dtype)
+        # state update to end of chunk: new stabilizer m' = ftot + Mend
+        Mend = jnp.maximum(mst, b[:, -1])                # [B,H]
+        w_k = jnp.exp(g - Mend[:, None])                 # ≤ 1  [B,C,H]
+        kv = jnp.einsum("bchk,bchl->bhkl",
+                        kb.astype(jnp.float32) * w_k[..., None],
+                        vb.astype(jnp.float32))
+        decay = jnp.exp(mst - Mend)
+        C2 = Cst * decay[..., None, None] + kv
+        n2 = nst * decay[..., None] + \
+            jnp.einsum("bchk,bch->bhk", kb.astype(jnp.float32), w_k)
+        return (C2, n2, ftot + Mend), out
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    _, outs = lax.scan(chunk_step, (C0, n0, m0), (qc, kc, vc, ic, fc))
+    out = outs.swapaxes(0, 1).reshape(B, Sp, H, hd)[:, :S]
+    out = out * og[:, :S].astype(out.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return x + y
+
+
+def mlstm_step(p, x, state, cfg: ModelConfig):
+    """Decode: x [B,1,D]; state (C,n,m)."""
+    B = x.shape[0]
+    H, hd = _heads(cfg)
+    xn = L.norm(p["ln"], x, cfg)
+    q, k, v, i_pre, f_pre, og = _mlstm_proj(p, xn)
+    q, k, v, og = q[:, 0], k[:, 0], v[:, 0], og[:, 0]
+    i_t, logf = i_pre[:, 0], jax.nn.log_sigmoid(f_pre[:, 0])
+    Cst, nst, mst = state
+    m_new = jnp.maximum(logf + mst, i_t)
+    wf = jnp.exp(logf + mst - m_new)
+    wi = jnp.exp(i_t - m_new)
+    kv = jnp.einsum("bhk,bhl->bhkl", k.astype(jnp.float32) * wi[..., None],
+                    v.astype(jnp.float32))
+    C2 = Cst * wf[..., None, None] + kv
+    n2 = nst * wf[..., None] + k.astype(jnp.float32) * wi[..., None]
+    scale = hd ** -0.5
+    num = jnp.einsum("bhk,bhkl->bhl", (q * scale).astype(jnp.float32), C2)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", (q * scale).astype(jnp.float32), n2))
+    den = jnp.maximum(den, jnp.exp(-m_new))
+    out = (num / den[..., None]).astype(x.dtype) * og
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(x.dtype))
+    return x + y[:, None], (C2, n2, m_new)
+
+
+# --------------------------------------------------------------------------
+# sLSTM (sequential)
+# --------------------------------------------------------------------------
+def _slstm_proj(p, xn):
+    dt = xn.dtype
+    z = jnp.einsum("bsd,dhk->bshk", xn, p["wz"].astype(dt))
+    i = jnp.einsum("bsd,dhk->bshk", xn, p["wi"].astype(dt)).astype(jnp.float32)
+    f = (jnp.einsum("bsd,dhk->bshk", xn, p["wf"].astype(dt))
+         + p["bf"].astype(dt)).astype(jnp.float32)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,dhk->bshk", xn,
+                                  p["wo_gate"].astype(dt)))
+    return z, i, f, o
+
+
+def _slstm_cell(carry, xs):
+    c, n, m = carry
+    z_t, i_t, f_t = xs
+    logf = jax.nn.log_sigmoid(f_t)
+    m2 = jnp.maximum(logf + m, i_t)
+    wf = jnp.exp(logf + m - m2)
+    wi = jnp.exp(i_t - m2)
+    c2 = wf * c + wi * jnp.tanh(z_t)
+    n2 = wf * n + wi
+    h = c2 / jnp.maximum(n2, 1e-6)
+    return (c2, n2, m2), h
+
+
+def slstm_seq(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, hd = _heads(cfg)
+    xn = L.norm(p["ln"], x, cfg)
+    z, i, f, o = _slstm_proj(p, xn)
+    c0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H, hd), -1e30, jnp.float32)
+    (cT, nT, mT), hs = lax.scan(
+        _slstm_cell, (c0, c0, m0),
+        (z.swapaxes(0, 1).astype(jnp.float32),
+         i.swapaxes(0, 1), f.swapaxes(0, 1)))
+    h = hs.swapaxes(0, 1).astype(x.dtype) * o
+    y = jnp.einsum("bshk,hkd->bsd", h, p["wo"].astype(x.dtype))
+    return x + y
+
+
+def slstm_step(p, x, state, cfg: ModelConfig):
+    xn = L.norm(p["ln"], x, cfg)
+    z, i, f, o = _slstm_proj(p, xn)
+    (c2, n2, m2), h = _slstm_cell(state, (z[:, 0].astype(jnp.float32),
+                                          i[:, 0], f[:, 0]))
+    y = jnp.einsum("bhk,hkd->bd", h.astype(x.dtype) * o[:, 0],
+                   p["wo"].astype(x.dtype))
+    return x + y[:, None], (c2, n2, m2)
+
+
+# --------------------------------------------------------------------------
+# model
+# --------------------------------------------------------------------------
+def forward(params, tokens, cfg: ModelConfig,
+            prefix_embeds: Optional[jnp.ndarray] = None):
+    x = L.embed(params["embed"], tokens, cfg)
+    pat = pattern_of(cfg)
+    n_cycles, tail = _cycle_split(cfg)
+
+    def cycle_fwd(cyc, x):
+        for p, t in enumerate(pat):
+            fn = mlstm_chunkwise if t == "mlstm" else slstm_seq
+            x = fn(cyc[str(p)], x, cfg=cfg)
+        return x
+
+    body = L.remat_wrap(cfg)(cycle_fwd)
+    if n_cycles:
+        def scan_body(x, cyc):
+            return body(cyc, x), None
+        x, _ = lax.scan(scan_body, x, params["cycles"])
+    for p in range(tail):
+        fn = mlstm_chunkwise if pat[p] == "mlstm" else slstm_seq
+        x = fn(params["tail"][p], x, cfg=cfg)
+    x = L.norm(params["final_norm"], x, cfg)
+    return x, jnp.float32(0.0)
+
+
+def _block_state(cfg: ModelConfig, t: str, batch: int,
+                 lead: Tuple[int, ...] = ()):
+    H, hd = _heads(cfg)
+    if t == "mlstm":
+        return (jnp.zeros(lead + (batch, H, hd, hd), jnp.float32),
+                jnp.zeros(lead + (batch, H, hd), jnp.float32),
+                jnp.full(lead + (batch, H), -1e30, jnp.float32))
+    return (jnp.zeros(lead + (batch, H, hd), jnp.float32),
+            jnp.zeros(lead + (batch, H, hd), jnp.float32),
+            jnp.full(lead + (batch, H, hd), -1e30, jnp.float32))
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    pat = pattern_of(cfg)
+    n_cycles, tail = _cycle_split(cfg)
+    cycles = {str(p): _block_state(cfg, t, batch, (n_cycles,))
+              for p, t in enumerate(pat)} if n_cycles else {}
+    tails = [_block_state(cfg, pat[p], batch) for p in range(tail)]
+    return {"cycles": cycles, "tail": tails,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int = 0):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens, cfg)
+    pat = pattern_of(cfg)
+    n_cycles, tail = _cycle_split(cfg)
+
+    if n_cycles:
+        def scan_body(x, xs):
+            cyc, states = xs
+            new_states = {}
+            for p, t in enumerate(pat):
+                step = mlstm_step if t == "mlstm" else slstm_step
+                x, ns = step(cyc[str(p)], x, states[str(p)], cfg)
+                new_states[str(p)] = ns
+            return x, new_states
+
+        x, new_cycles = lax.scan(scan_body, x,
+                                 (params["cycles"], cache["cycles"]))
+    else:
+        new_cycles = {}
+    new_tail = []
+    for p in range(tail):
+        step = mlstm_step if pat[p] == "mlstm" else slstm_step
+        x, ns = step(params["tail"][p], x, cache["tail"][p], cfg)
+        new_tail.append(ns)
+    x = L.norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)
+    return logits, {"cycles": new_cycles, "tail": new_tail,
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,2 @@
+"""Serving substrate: KV caches (full / rolling-window / recurrent state)
+and the batched decode loop."""

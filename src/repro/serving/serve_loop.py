@@ -1,0 +1,161 @@
+"""Batched serving: prefill + one-token decode steps over family-specific
+caches (full KV, SWA rolling buffer, recurrent state).
+
+``make_serve_step`` builds the jit-able single-token step the dry-run
+lowers (``decode_*`` / ``long_*`` shapes); ``Generator`` drives end-to-end
+greedy/temperature generation; ``BatchServer`` is a wave-scheduling batch
+server (requests are grouped into fixed-size left-padded waves that share
+one cache — per-slot position bookkeeping via the attention mask's
+``kp >= 0`` guard on never-written slots).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+
+
+@dataclasses.dataclass(frozen=True)
+class GenConfig:
+    max_new_tokens: int = 16
+    temperature: float = 0.0          # 0 → greedy
+    seed: int = 0
+
+
+def make_serve_step(cfg: ModelConfig, sample: bool = True,
+                    temperature: float = 1.0):
+    """→ ``serve_step(params, cache, tokens[B,1], key) ->
+    (next_tokens [B,1], cache')``.  Greedy when ``key`` is all-zero,
+    temperature sampling otherwise.  With ``sample=False`` returns logits
+    instead of sampled tokens."""
+    temperature = max(float(temperature), 1e-6)
+
+    def serve_step(params, cache, tokens, key):
+        logits, cache2 = api.decode_step(cfg, params, cache, tokens)
+        logits = logits[:, -1].astype(jnp.float32)       # [B, V]
+        if not sample:
+            return logits, cache2
+        greedy = jnp.argmax(logits, axis=-1)
+        sampled = jax.random.categorical(key, logits / temperature)
+        nxt = jnp.where(jnp.all(key == 0), greedy, sampled)
+        return nxt[:, None].astype(jnp.int32), cache2
+
+    return serve_step
+
+
+class Generator:
+    """End-to-end generation for one batch of same-length prompts."""
+
+    def __init__(self, cfg: ModelConfig, params, gen: GenConfig = GenConfig()):
+        self.cfg, self.params, self.gen = cfg, params, gen
+        self._step = jax.jit(make_serve_step(
+            cfg, temperature=gen.temperature or 1.0))
+
+    def _init_cache(self, batch: int, context_len: int):
+        cache_len = api.decode_cache_len(self.cfg, context_len)
+        kw = {"enc_len": 1500} if self.cfg.family == "audio" else {}
+        return api.init_cache(self.cfg, batch, cache_len, **kw)
+
+    def generate(self, prompts: np.ndarray,
+                 frame_embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: [B, S] int32 → [B, S + max_new] (greedy when
+        temperature == 0)."""
+        cfg, gen = self.cfg, self.gen
+        B, S = prompts.shape
+        ctx = S + gen.max_new_tokens
+        cache = self._init_cache(B, ctx)
+        if cfg.family == "audio":
+            enc = api.module_for(cfg).encode(
+                self.params, jnp.asarray(frame_embeds), cfg)
+            from repro.models import encdec
+            cache = encdec.build_cache(self.params, enc, cfg, B,
+                                       api.decode_cache_len(cfg, ctx))
+
+        toks = jnp.asarray(prompts, jnp.int32)
+        key = jax.random.PRNGKey(gen.seed)
+        out = [toks]
+        # feed the prompt token-by-token (universal prefill; family-
+        # specific fast prefill lives in models/*.prefill)
+        cur = toks[:, :1]
+        for t in range(S + gen.max_new_tokens - 1):
+            if gen.temperature > 0:
+                key, sub = jax.random.split(key)
+            else:
+                sub = jnp.zeros((2,), jnp.uint32)
+            nxt, cache = self._step(self.params, cache, cur, sub)
+            if t + 1 < S:
+                cur = toks[:, t + 1:t + 2]      # teacher-force the prompt
+            else:
+                cur = nxt
+                out.append(nxt)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int
+    result: Optional[np.ndarray] = None
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+class BatchServer:
+    """Wave-scheduling batch server.
+
+    Pending requests are grouped into waves of ``batch_size``; each wave is
+    left-padded to the wave's max prompt length and generated together.
+    (A shared scalar cache position keeps the step fully static — the
+    continuous-batching upgrade is per-slot positions, noted in DESIGN.md.)
+    """
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 8,
+                 gen: GenConfig = GenConfig()):
+        self.cfg, self.params = cfg, params
+        self.batch_size = batch_size
+        self.gen = gen
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+        self._uid = 0
+        self._generator = Generator(cfg, params, gen)
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens, submitted_at=time.time()))
+        return self._uid
+
+    def step(self) -> List[int]:
+        """Serve one wave; returns finished uids."""
+        if not self.queue:
+            return []
+        wave = self.queue[:self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        S = max(len(r.prompt) for r in wave)
+        B = len(wave)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt      # left padding
+        gen = dataclasses.replace(
+            self.gen, max_new_tokens=max(r.max_new_tokens for r in wave))
+        out = self._generator.generate(toks)
+        finished = []
+        for i, r in enumerate(wave):
+            r.result = out[i, S:S + r.max_new_tokens]
+            r.done_at = time.time()
+            self.done[r.uid] = r
+            finished.append(r.uid)
+        return finished
+
+    def run_until_drained(self) -> Dict[int, Request]:
+        while self.queue:
+            self.step()
+        return self.done

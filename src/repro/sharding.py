@@ -1,0 +1,345 @@
+"""Logical-axis sharding rules for the LM substrate (MaxText-style).
+
+Every parameter leaf is assigned a tuple of *logical* axis names from its
+pytree path + shape; ``LOGICAL_RULES`` maps logical names to mesh axes.
+The same rules drive single-pod (data, model) and multi-pod
+(pod, data, model) meshes — batch extends over ('pod', 'data'), parameters
+are 2-D sharded (FSDP over 'data' × TP over 'model') and replicated across
+pods (gradient all-reduce crosses the DCN once per step).
+
+Resolution is divisibility-aware: a logical axis only binds to a mesh axis
+if the dimension is divisible by the axis size (so kv_heads=8 on a 16-wide
+'model' axis replicates instead of padding, while d_ff=14336 shards).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+__all__ = [
+    "logical_axes_for", "resolve", "param_shardings", "batch_shardings",
+    "cache_shardings", "scalar_sharding", "LOGICAL_RULES",
+    "use_activation_mesh", "constrain",
+]
+
+# logical axis → preferred mesh axis (None = replicate)
+LOGICAL_RULES: Dict[str, Optional[str]] = {
+    "batch": "data",          # extended to ('pod','data') on multi-pod meshes
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ff": "model",
+    "rnn": "model",
+    "experts": None,          # E=8 < axis 16: TP d_ff instead (see DESIGN §6)
+    "embed": "data",          # FSDP / ZeRO param+optimizer sharding
+    "vocab_table": "data",    # tok table rows (gather-friendly)
+    "kv_seq": "model",        # KV-cache seq dim when kv_heads can't shard
+    "head_dim": None,
+    "layers": None,
+    "seq": None,
+    "enc_seq": None,
+    "conv_w": None,
+}
+
+
+# --------------------------------------------------------------------------
+# activation sharding constraints (GSPMD hygiene)
+# --------------------------------------------------------------------------
+# Model code calls ``constrain(x, "batch", "seq", "embed")`` at layer
+# boundaries; without these hints GSPMD resolves FSDP-sharded weight
+# contractions as partial-sum + all-reduce, replicating the batch dim of
+# huge activations (observed: unsharded [B, C, V] loss logits).  The mesh is
+# supplied by the launcher via ``use_activation_mesh`` at trace time; when
+# unset (single-device smoke tests) constraints are no-ops.
+
+_ACT = threading.local()
+
+
+@contextlib.contextmanager
+def use_activation_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_ACT, "mesh", None)
+    _ACT.mesh = mesh
+    try:
+        yield
+    finally:
+        _ACT.mesh = prev
+
+
+def activation_mesh() -> Optional[Mesh]:
+    return getattr(_ACT, "mesh", None)
+
+
+def constrain(x, *axes: Optional[str]):
+    """Apply a logical-axis sharding constraint to an activation (no-op
+    without an active activation mesh)."""
+    mesh = activation_mesh()
+    if mesh is None:
+        return x
+    if len(axes) < x.ndim:
+        axes = tuple(axes) + (None,) * (x.ndim - len(axes))
+    spec = resolve(axes[:x.ndim], x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_like_params(tree, cfg, param_shapes_tree=None):
+    """Pin a params-shaped tree (e.g. the f32 gradient accumulator) to the
+    parameters' own 2-D sharding.  Without this the scan-carried grad
+    accumulator initializes from unsharded zeros and GSPMD may keep it
+    replicated — turning the per-microbatch gradient reduction into
+    full-size all-reduces instead of reduce-scatters."""
+    mesh = activation_mesh()
+    if mesh is None:
+        return tree
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        axes = logical_axes_for(_path_str(path), leaf.shape, cfg)
+        spec = resolve(axes, leaf.shape, mesh)
+        out.append(jax.lax.with_sharding_constraint(
+            leaf, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def kv_cache_mode(cfg) -> Optional[str]:
+    """How the decode KV cache shards on the active mesh: 'heads' when
+    kv_heads divides the model axis, else 'seq' (cache sequence dim over
+    'model'; attention becomes partial-softmax + tiny all-reduces).
+    None without a mesh."""
+    mesh = activation_mesh()
+    if mesh is None or mesh.shape.get("model", 1) <= 1:
+        return None
+    return "heads" if cfg.n_kv_heads % mesh.shape["model"] == 0 else "seq"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def logical_axes_for(path_str: str, shape: Tuple[int, ...],
+                     cfg: ModelConfig) -> Tuple[Optional[str], ...]:
+    """Logical axis names for one parameter leaf."""
+    nd = len(shape)
+    name = path_str.rsplit("/", 1)[-1]
+    # scan-stacked param groups carry a leading layer/cycle dim
+    stacked = any(seg in path_str for seg in
+                  ("layers/", "enc_layers/", "dec_layers/", "cycles/")) \
+        or path_str.startswith(("layers", "enc_layers", "dec_layers",
+                                "cycles"))
+    lead: Tuple[Optional[str], ...] = ("layers",) if stacked else ()
+    core = shape[1:] if stacked else shape
+    cnd = len(core)
+
+    def out(*axes):
+        assert len(axes) == cnd, (path_str, shape, axes)
+        return lead + tuple(axes)
+
+    # -- embeddings ---------------------------------------------------------
+    # tok: gather-friendly — vocab over 'data' only (XLA lowers a gather
+    # from a vocab-sharded table to local-gather+mask+all-reduce, keeping
+    # the batch dim sharded; 2-D table sharding forces involuntary full
+    # rematerialization through the SPMD partitioner)
+    if "embed" in path_str and name == "tok":
+        return out("vocab_table", "embed")
+    if "embed" in path_str and name == "out":
+        return out("embed", "vocab")
+
+    # -- MoE (before generic attention/MLP names — moe params share them) ---
+    if "moe" in path_str:
+        if name == "router":
+            return out("embed", "experts")
+        if name in ("wg", "wu") and cnd == 3:
+            return out("experts", "embed", "ff")
+        if name == "wo" and cnd == 3:
+            return out("experts", "ff", "embed")
+
+    # -- attention ----------------------------------------------------------
+    if name == "wq" and cnd == 3:
+        return out("embed", "heads", "head_dim")
+    if name in ("wk", "wv") and cnd == 3:
+        return out("embed", "kv_heads", "head_dim")
+    if name == "wo" and cnd == 3:                  # attn out [H, hd, D]
+        return out("heads", "head_dim", "embed")
+    if name == "wo_gate" and cnd == 3:             # xlstm output gate
+        return out("embed", "heads", "head_dim")
+    if name in ("wz", "wi", "wf") and cnd == 3:    # xlstm projections
+        return out("embed", "heads", "head_dim")
+    if name in ("wi", "wf") and cnd == 2 and any(
+            s in path_str for s in ("blocks", "cycles", "tail")):
+        return out("embed", "heads")               # mlstm scalar gates
+
+    # -- dense MLP -----------------------------------------------------------
+    if name in ("wg", "wu", "wi") and cnd == 2:
+        return out("embed", "ff")
+    if name == "wo" and cnd == 2:
+        return out("ff", "embed")
+
+    # -- griffin recurrent block ---------------------------------------------
+    if name in ("w_gate", "w_x") and cnd == 2:
+        return out("embed", "rnn")
+    if name == "w_out" and cnd == 2:
+        return out("rnn", "embed")
+    if name in ("wa",) and cnd == 2:
+        return out("embed", "rnn")                 # [w, w]: FSDP × TP
+    if name == "conv_w":
+        return out("conv_w", "rnn")
+
+    # -- 1-D / small leaves ---------------------------------------------------
+    if cnd == 0:
+        return out()
+    if cnd == 1:
+        # gate biases / norm scales over the rnn or ff width
+        if name in ("conv_b", "ba", "bi", "lam"):
+            return out("rnn")
+        return out(None)
+    if cnd == 2 and name == "bf":
+        return out("heads", "head_dim")
+
+    # -- fallback: shard the two largest trailing dims (data × model) --------
+    if cnd >= 2:
+        return lead + (None,) * (cnd - 2) + ("embed", "ff")
+    return lead + (None,) * cnd
+
+
+def _mesh_axes_for(logical: Optional[str], mesh: Mesh):
+    """Resolve one logical axis to mesh axis (or tuple for batch)."""
+    if logical is None:
+        return None
+    if logical == "batch":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        return axes if axes else None
+    m = LOGICAL_RULES.get(logical)
+    if m is None or m not in mesh.shape:
+        return None
+    return m
+
+
+def _axis_size(mesh: Mesh, m) -> int:
+    if m is None:
+        return 1
+    if isinstance(m, tuple):
+        return int(np.prod([mesh.shape[a] for a in m]))
+    return mesh.shape[m]
+
+
+def resolve(axes: Sequence[Optional[str]], shape: Tuple[int, ...],
+            mesh: Mesh) -> P:
+    """Logical axes → PartitionSpec, dropping non-divisible bindings and
+    duplicate mesh-axis uses (first binding wins)."""
+    spec = []
+    used = set()
+    for dim, logical in zip(shape, axes):
+        m = _mesh_axes_for(logical, mesh)
+        if m is None:
+            spec.append(None)
+            continue
+        flat = m if isinstance(m, tuple) else (m,)
+        if used & set(flat):
+            spec.append(None)
+            continue
+        size = _axis_size(mesh, m)
+        if size <= 1 or dim % size != 0:
+            spec.append(None)
+            continue
+        used.update(flat)
+        spec.append(m)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, param_shapes):
+    """NamedSharding tree matching ``param_shapes`` (a ShapeDtypeStruct
+    tree from ``models.api.param_shapes``)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    out = []
+    for path, leaf in flat:
+        axes = logical_axes_for(_path_str(path), leaf.shape, cfg)
+        out.append(NamedSharding(mesh, resolve(axes, leaf.shape, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def scalar_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs):
+    """Inputs: batch dim over ('pod','data') when divisible; the rest
+    replicated.  Works for train/prefill batches (dicts of [B, ...])."""
+    def one(leaf):
+        spec = resolve(("batch",) + (None,) * (len(leaf.shape) - 1),
+                       leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, specs)
+
+
+def _kv_cache_axes(cfg: ModelConfig, mesh: Mesh, lead: Tuple):
+    """KV buffers [.., B, S, K, hd]: shard kv_heads over 'model' when
+    divisible, else fall back to sharding the cache's *sequence* dim over
+    'model' (decode attention over seq-sharded KV lowers to partial
+    softmax + tiny all-reduces — the memory win dominates at 32k+)."""
+    K = cfg.n_kv_heads
+    msize = mesh.shape.get("model", 1)
+    if msize > 1 and K % msize == 0:
+        return lead + ("batch", "seq", "kv_heads", "head_dim")
+    return lead + ("batch", "kv_seq", None, "head_dim")
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec):
+    """Decode caches: batch over ('pod','data'); KV buffers additionally
+    over 'model' (kv_heads when divisible, else the sequence dim);
+    recurrent states over 'model' on their width dims.
+
+    Leaf layouts (lead = stacked layer/cycle dim where present):
+      [(L,) B, S, K, hd]   transformer / whisper / griffin-attn KV
+      [(L,) B, cw-1, W]    griffin conv state        (W = rnn width)
+      [(L,) B, W]          griffin RG-LRU state
+      [(L,) B, H, dk(,dv)] xlstm mLSTM/sLSTM states
+      scalar pos
+    """
+    def one(path, leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        ps = _path_str(path)
+        name = ps.rsplit("/", 1)[-1]
+        stacked = ("cycles/" in ps or ps.startswith("cycles")
+                   or (name in ("k", "v", "xk", "xv") and nd == 5))
+        lead = ("layers",) if stacked else ()
+        core = nd - len(lead)
+
+        if name in ("k", "v", "xk", "xv"):               # KV buffers
+            axes = _kv_cache_axes(cfg, mesh, lead)
+        elif name == "conv":                             # [.., B, cw-1, W]
+            axes = lead + ("batch", None, "rnn")
+        elif name == "h":                                # [.., B, W]
+            axes = lead + ("batch", "rnn")
+        elif core == 4 and shape[-1] == shape[-2]:       # mlstm C [B,H,d,d]
+            axes = lead + ("batch", "heads", None, None)
+        elif core == 3:                                  # xlstm n / sLSTM
+            axes = lead + ("batch", "heads", "head_dim")
+        elif core == 2:                                  # xlstm m [B,H]
+            axes = lead + ("batch", "heads")
+        else:
+            axes = lead + ("batch",) + (None,) * (core - 1)
+        axes = tuple(axes)[:nd]
+        return NamedSharding(mesh, resolve(axes, shape, mesh))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_spec)
+    out = [one(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,138 @@
+"""Sharded, atomic, elastic checkpointing.
+
+Layout (one directory per step)::
+
+    <dir>/step_00000420/
+        manifest.json        # treedef, shapes, dtypes, step, write-complete
+        leaf_00000.npy ...   # one file per pytree leaf
+
+* **atomic** — written to ``step_XXXX.tmp/`` then ``os.rename``d; a crash
+  mid-write never corrupts the latest checkpoint.
+* **elastic** — leaves are saved as *full* (unsharded) arrays and restored
+  with ``jax.device_put(leaf, sharding)`` against whatever mesh the resumed
+  job has, so a restart may use a different data-parallel size (validated
+  in tests/test_train.py::test_elastic_reshard).  On a real multi-host pod
+  each host writes its address-able shards and the manifest carries the
+  global shape — the single-process layout here is the degenerate case.
+* **async** — ``save(..., blocking=False)`` hands the write to a daemon
+  thread (double-buffered; at most one outstanding write).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+_PENDING: Optional[threading.Thread] = None
+
+
+def _leaf_name(i: int) -> str:
+    return f"leaf_{i:05d}.npy"
+
+
+def save(ckpt_dir: str, step: int, state, blocking: bool = True) -> str:
+    """Write ``state`` (a pytree of arrays) for ``step``; returns path."""
+    global _PENDING
+    if _PENDING is not None:
+        _PENDING.join()            # one outstanding async write max
+        _PENDING = None
+
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    # snapshot to host before handing off (donation-safe)
+    host_leaves = [np.asarray(l) for l in leaves]
+
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+
+    def write():
+        os.makedirs(tmp, exist_ok=True)
+        for i, l in enumerate(host_leaves):
+            np.save(os.path.join(tmp, _leaf_name(i)), l)
+        manifest = {
+            "step": int(step),
+            "n_leaves": len(host_leaves),
+            "treedef": str(treedef),
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "complete": True,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+    else:
+        _PENDING = threading.Thread(target=write, daemon=True)
+        _PENDING.start()
+    return final
+
+
+def wait():
+    """Block until any async save has landed."""
+    global _PENDING
+    if _PENDING is not None:
+        _PENDING.join()
+        _PENDING = None
+
+
+def steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.endswith(".tmp"):
+            m = os.path.join(ckpt_dir, d, "manifest.json")
+            if os.path.exists(m):
+                out.append(int(d[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    s = steps(ckpt_dir)
+    return s[-1] if s else None
+
+
+def restore(ckpt_dir: str, target, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``target`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: matching pytree of NamedShardings
+    for elastic placement on the *current* mesh (may differ from the mesh
+    that wrote the checkpoint)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    if not manifest.get("complete"):
+        raise IOError(f"incomplete checkpoint at {path}")
+
+    t_leaves, treedef = jax.tree_util.tree_flatten(target)
+    assert manifest["n_leaves"] == len(t_leaves), \
+        f"leaf count mismatch: ckpt {manifest['n_leaves']} vs target {len(t_leaves)}"
+    s_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                if shardings is not None else [None] * len(t_leaves))
+
+    out = []
+    for i, (t, s) in enumerate(zip(t_leaves, s_leaves)):
+        arr = np.load(os.path.join(path, _leaf_name(i)))
+        assert tuple(arr.shape) == tuple(t.shape), \
+            f"leaf {i}: ckpt shape {arr.shape} vs target {t.shape}"
+        arr = arr.astype(t.dtype)
+        out.append(jax.device_put(arr, s) if s is not None else
+                   jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    for s in steps(ckpt_dir)[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))

@@ -1,0 +1,144 @@
+"""Fault tolerance: checkpoint-restart driver, straggler watchdog,
+preemption handling, failure injection for tests.
+
+Posture at 1000+ nodes (synchronous SPMD):
+
+* **node failure** → the job dies (collectives time out); the *driver*
+  restarts it from the latest atomic checkpoint.  `run_with_restarts`
+  is that driver loop, in-process.  Determinism of the data pipeline
+  (counter-based; see data.py) + checkpointed (params, opt, step) make the
+  restart exactly replay the lost steps.
+* **stragglers** → per-step wall-time watchdog; a step slower than
+  ``threshold × median`` is logged as a straggler event.  On a real
+  cluster the event feeds the scheduler's eviction policy (replace node,
+  restart from checkpoint); here it is surfaced to the caller.
+* **preemption** → SIGTERM handler requests a final checkpoint at the next
+  step boundary, then exits cleanly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, Dict, List, Optional
+
+from . import checkpoint
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    seconds: float
+    median: float
+
+
+class Watchdog:
+    """Tracks per-step wall time; flags steps slower than
+    ``threshold ×`` the running median."""
+
+    def __init__(self, threshold: float = 3.0, window: int = 50):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.events: List[StragglerEvent] = []
+
+    def observe(self, step: int, seconds: float) -> Optional[StragglerEvent]:
+        med = (sorted(self.times)[len(self.times) // 2]
+               if self.times else seconds)
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) >= 5 and seconds > self.threshold * med:
+            ev = StragglerEvent(step, seconds, med)
+            self.events.append(ev)
+            return ev
+        return None
+
+
+class PreemptionHandler:
+    """SIGTERM → request a clean stop at the next step boundary."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = None
+
+    def install(self):
+        def handler(signum, frame):
+            self.requested = True
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+
+
+class FailureInjector:
+    """Deterministic failure injection for tests: raises RuntimeError at
+    the given steps (once each)."""
+
+    def __init__(self, fail_at_steps):
+        self.fail_at = set(fail_at_steps)
+
+    def maybe_fail(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected node failure at step {step}")
+
+
+def run_with_restarts(*,
+                      init_fn: Callable[[], Dict],
+                      step_fn: Callable[[Dict, int], Dict],
+                      n_steps: int,
+                      ckpt_dir: str,
+                      ckpt_every: int = 10,
+                      max_failures: int = 3,
+                      shardings=None,
+                      watchdog: Optional[Watchdog] = None,
+                      injector: Optional[FailureInjector] = None,
+                      on_metrics: Optional[Callable] = None) -> Dict:
+    """Checkpoint-restart training driver.
+
+    ``step_fn(state, step) -> state`` must advance ``state['step']``.
+    Restarts resume from the latest complete checkpoint; the deterministic
+    data pipeline replays the stream exactly.
+    """
+    failures = 0
+    preempt = PreemptionHandler().install()
+    try:
+        while True:
+            try:
+                latest = checkpoint.latest_step(ckpt_dir)
+                if latest is not None:
+                    template = init_fn()
+                    state = checkpoint.restore(ckpt_dir, template,
+                                               shardings=shardings)
+                    start = latest
+                else:
+                    state = init_fn()
+                    start = 0
+                for step in range(start, n_steps):
+                    if injector is not None:
+                        injector.maybe_fail(step)
+                    t0 = time.perf_counter()
+                    state = step_fn(state, step)
+                    dt = time.perf_counter() - t0
+                    if watchdog is not None:
+                        watchdog.observe(step, dt)
+                    if on_metrics is not None:
+                        on_metrics(step, state, dt)
+                    done = step + 1
+                    if done % ckpt_every == 0 or done == n_steps \
+                            or preempt.requested:
+                        checkpoint.save(ckpt_dir, done, state)
+                    if preempt.requested:
+                        return state
+                return state
+            except (RuntimeError,) as e:
+                failures += 1
+                if failures > max_failures:
+                    raise
+                # driver restart: fall through to restore-from-latest
+                continue
+    finally:
+        preempt.uninstall()

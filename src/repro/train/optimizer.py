@@ -1,0 +1,105 @@
+"""Hand-rolled AdamW + global-norm clipping + warmup-cosine schedule.
+
+No optax: the optimizer state is a plain pytree shaped like the params, so
+it inherits the params' 2-D (FSDP × TP) sharding — that *is* the ZeRO-style
+optimizer-state sharding (each chip owns the m/v slices of its param
+shards).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init(params) -> Dict:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros)}
+
+
+def schedule(c: OptConfig, step) -> jnp.ndarray:
+    """Linear warmup → cosine decay to min_lr_ratio·lr."""
+    step = step.astype(jnp.float32)
+    warm = c.lr * step / max(c.warmup_steps, 1)
+    frac = jnp.clip((step - c.warmup_steps)
+                    / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = c.min_lr_ratio * c.lr + (1 - c.min_lr_ratio) * c.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _is_matrix(p) -> bool:
+    return p.ndim >= 2
+
+
+def apply(c: OptConfig, params, grads, opt_state, step) -> Tuple[Dict, Dict, Dict]:
+    """→ (new_params, new_opt_state, metrics).  step is 0-based."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
+
+    t = step.astype(jnp.float32) + 1.0
+    lr = schedule(c, step)
+    bc1 = 1.0 - c.b1 ** t
+    bc2 = 1.0 - c.b2 ** t
+
+    m2 = jax.tree.map(lambda m, g: c.b1 * m + (1 - c.b1) * g,
+                      opt_state["m"], grads)
+    v2 = jax.tree.map(lambda v, g: c.b2 * v + (1 - c.b2) * g * g,
+                      opt_state["v"], grads)
+
+    def upd(p, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + c.eps)
+        if c.weight_decay and _is_matrix(p):
+            u = u + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, m2, v2)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": m2, "v": v2}, metrics
+
+
+# -- gradient compression (beyond-paper: cheap DCN all-reduce) ---------------
+def compress_int8(tree):
+    """Per-leaf symmetric int8 quantization: (q, scale).  Used to shrink
+    cross-pod (DCN) gradient all-reduce traffic 4× vs f32; validated
+    convergence-neutral on the smoke model in tests/test_train.py."""
+    def one(g):
+        g32 = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        return {"q": q, "scale": scale}
+    return jax.tree.map(one, tree)
+
+
+def decompress_int8(ctree):
+    return jax.tree.map(
+        lambda c: c["q"].astype(jnp.float32) * c["scale"],
+        ctree, is_leaf=lambda x: isinstance(x, dict) and "q" in x)

@@ -1,0 +1,141 @@
+"""Distributed stencil runtime tests.
+
+These must see >1 device, so they run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main test
+process keeps the default single device, as required by the dry-run
+contract)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_in_subprocess(code: str):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+CHECK_BODY = """
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+from repro.core import dsl as st, suite
+from repro.kernels.stencil import ref
+
+assert len(jax.devices()) == 8, jax.devices()
+
+def check(name, mesh_shape, axis_names, grid_axes, overlap, inner):
+    k = suite.get_kernel(name)
+    nd = k.info.ndim
+    interior = (32, 32) if nd == 2 else (16, 16, 32)
+    mesh = jax.make_mesh(mesh_shape, axis_names)
+    u = st.grid(dtype=st.f32, shape=interior, order=k.info.order).randomize(0)
+    v = st.grid(dtype=st.f32, shape=interior, order=k.info.order)
+    be = st.distributed(grid_axes=grid_axes, overlap=overlap, inner=inner)
+    def tgt(u, v):
+        for _ in range(3):
+            st.map(e=u.shape)(k)(u, v)
+            (v, u) = (u, v)
+        return u
+    got = st.launch(backend=be, mesh=mesh)(tgt)(u, v).value.interior
+
+    u2 = st.grid(dtype=st.f32, shape=interior, order=k.info.order).randomize(0)
+    v2 = st.grid(dtype=st.f32, shape=interior, order=k.info.order)
+    want = st.launch(backend=st.xla())(tgt)(u2, v2).value.interior
+    err = float(jnp.abs(got - want).max())
+    assert err < 1e-5, (name, mesh_shape, grid_axes, overlap, err)
+    print('OK', name, mesh_shape, grid_axes, 'overlap' if overlap else 'sync')
+"""
+
+
+def test_distributed_1d_decomposition():
+    _run_in_subprocess(CHECK_BODY + """
+check('star2d2r', (8,), ('data',), ('data', None), False, st.xla())
+check('star2d2r', (8,), ('data',), ('data', None), True, st.xla())
+""")
+
+
+def test_distributed_2d_decomposition_box():
+    _run_in_subprocess(CHECK_BODY + """
+check('box2d1r', (4, 2), ('data', 'model'), ('data', 'model'), False, st.xla())
+check('box2d1r', (4, 2), ('data', 'model'), ('data', 'model'), True, st.xla())
+""")
+
+
+def test_distributed_3d_multipod_axes():
+    _run_in_subprocess(CHECK_BODY + """
+check('star3d2r', (2, 2, 2), ('pod', 'data', 'model'),
+      ('pod', 'data', 'model'), True, st.xla())
+""")
+
+
+def test_distributed_with_pallas_inner():
+    _run_in_subprocess(CHECK_BODY + """
+check('star3d1r', (2, 2), ('data', 'model'), ('data', 'model', None), False,
+      st.pallas(template='gmem', block=(8, 8, 128)))
+""")
+
+
+def test_distributed_rejects_bad_divisibility():
+    _run_in_subprocess(CHECK_BODY + """
+from repro.core import distributed as dist
+from jax.sharding import Mesh
+k = suite.get_kernel('star2d1r')
+mesh = jax.make_mesh((8,), ('data',))
+try:
+    dist.lower_distributed(k.ir, {'u': (1, 1), 'v': (1, 1)}, (30, 30), None,
+                           st.distributed(grid_axes=('data', None)), mesh)
+except ValueError as e:
+    assert 'not divisible' in str(e)
+    print('OK divisibility')
+else:
+    raise AssertionError('expected ValueError')
+""")
+
+
+def test_time_skewed_matches_stepwise():
+    """Overlapped tiling (time_steps=k, ONE k·h-wide exchange) must equal
+    k separately-exchanged steps — including at global boundaries where
+    the zero grid-halo is re-imposed between fused steps."""
+    _run_in_subprocess("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import acoustic, dsl as st
+from repro.core import distributed as dist
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = (48, 32, 24)  # local (12,16): fits k*h <= 12 for k=3, h=4
+k_ir = acoustic.acoustic_iso_kernel.ir
+halos = {g: acoustic.acoustic_iso_kernel.info.halo for g in k_ir.grid_params}
+
+for k_steps in (2, 3):
+    p0, p1, vp2, damp, dt = acoustic.make_fields(shape, pml_width=4)
+    acoustic.inject_source(p1, 0)
+    arrays = {"p0": p0.data, "p1": p1.data, "vp2": vp2.data,
+              "damp": damp.data}
+    scal = {"dt": dt}
+
+    be = st.distributed(grid_axes=("data", "model", None),
+                        time_steps=k_steps, swap=("p0", "p1"))
+    fused = dist.lower_distributed(k_ir, halos, shape, None, be, mesh)
+    got = fused(dict(arrays), scal)
+
+    be1 = st.distributed(grid_axes=("data", "model", None), overlap=False)
+    step = dist.lower_distributed(k_ir, halos, shape, None, be1, mesh)
+    ref = dict(arrays)
+    for _ in range(k_steps):
+        out = step(ref, scal)
+        ref = dict(out, p0=ref["p1"], p1=out["p0"])
+
+    for g in ("p0", "p1"):
+        err = float(jnp.abs(got[g] - ref[g]).max())
+        assert err < 1e-6, (k_steps, g, err)
+    print("OK time-skew", k_steps)
+""")

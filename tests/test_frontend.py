@@ -1,0 +1,115 @@
+"""Frontend + analysis unit tests: parsing, shape/order inference, errors."""
+import pytest
+
+from repro.core import analysis, dsl as st, frontend, ir
+from repro.core import suite
+
+
+def test_star_shape_and_order():
+    k = suite.get_kernel("star3d4r")
+    assert k.info.shape == "star"
+    assert k.info.order == 4
+    assert k.info.ndim == 3
+    assert k.info.halo == (4, 4, 4)
+    assert k.info.n_taps == 25  # the paper's 25-point star
+    assert k.info.flops_per_point == 49  # paper Table 4
+
+
+def test_box_shape():
+    k = suite.get_kernel("box2d2r")
+    assert k.info.shape == "box"
+    assert k.info.n_taps == 25
+    assert k.info.flops_per_point == 49  # paper Table 4
+
+
+@pytest.mark.parametrize("name,flops", [
+    ("star2d1r", 9), ("star2d2r", 17), ("star2d3r", 25), ("star2d4r", 33),
+    ("star3d1r", 13), ("star3d2r", 25), ("star3d3r", 37), ("star3d4r", 49),
+])
+def test_paper_table4_star_flops(name, flops):
+    assert suite.get_kernel(name).info.flops_per_point == flops
+
+
+def test_parse_requires_type_hints():
+    with pytest.raises(frontend.StencilSyntaxError):
+        @st.kernel
+        def bad(u, v):  # noqa: ANN001
+            v.at(0).set(u.at(0))
+
+
+def test_parse_rejects_noncenter_write():
+    with pytest.raises(frontend.StencilSyntaxError):
+        @st.kernel
+        def bad(u: st.grid, v: st.grid):
+            v.at(1, 0).set(u.at(0, 0))
+
+
+def test_parse_rejects_dynamic_offsets():
+    with pytest.raises(frontend.StencilSyntaxError):
+        @st.kernel
+        def bad(u: st.grid, v: st.grid, i: st.i32):
+            v.at(0, 0).set(u.at(i, 0))
+
+
+def test_parse_rejects_inconsistent_arity():
+    with pytest.raises(frontend.StencilSyntaxError):
+        @st.kernel
+        def bad(u: st.grid, v: st.grid):
+            v.at(0, 0).set(u.at(0, 0, 0))
+
+
+def test_multi_statement_locals():
+    @st.kernel
+    def k(u: st.grid, v: st.grid, a: st.f32):
+        t = u.at(-1, 0) + u.at(1, 0)
+        v.at(0, 0).set(a * t + u.at(0, 0))
+
+    assert k.info.halo == (1, 0)
+    assert ("a", "f32") in k.ir.scalar_params
+
+
+def test_read_after_write_noncenter_rejected():
+    with pytest.raises(ValueError, match="non-center read"):
+        @st.kernel
+        def bad(u: st.grid, v: st.grid):
+            v.at(0, 0).set(u.at(0, 0))
+            u.at(0, 0).set(v.at(1, 0))
+
+
+def test_read_after_write_center_allowed():
+    @st.kernel
+    def ok(u: st.grid, v: st.grid):
+        v.at(0, 0).set(u.at(1, 0))
+        u.at(0, 0).set(v.at(0, 0) + 1.0)
+
+    assert set(ok.ir.output_grids()) == {"v", "u"}
+
+
+def test_linearize_simple():
+    k = suite.get_kernel("star2d1r")
+    stmts = analysis.inline_locals(k.ir)
+    terms, const = analysis.linearize(stmts[0].expr)
+    assert len(terms) == 5
+    assert isinstance(const, ir.Const)
+
+
+def test_linearize_rejects_product():
+    @st.kernel
+    def sq(u: st.grid, v: st.grid):
+        v.at(0, 0).set(u.at(1, 0) * u.at(-1, 0))
+
+    stmts = analysis.inline_locals(sq.ir)
+    with pytest.raises(analysis.NotLinearError):
+        analysis.linearize(stmts[0].expr)
+
+
+def test_linearize_center_fields():
+    @st.kernel
+    def wv(u: st.grid, vp: st.grid, v: st.grid):
+        v.at(0, 0).set(vp.at(0, 0) * (u.at(1, 0) + u.at(-1, 0)) - v.at(0, 0))
+
+    stmts = analysis.inline_locals(wv.ir)
+    with pytest.raises(analysis.NotLinearError):
+        analysis.linearize(stmts[0].expr)  # strict mode rejects vp·u
+    terms, const = analysis.linearize(stmts[0].expr, allow_center_fields=True)
+    assert set(terms) == {("u", (1, 0)), ("u", (-1, 0))}

@@ -45,6 +45,13 @@ def main(argv=None):
         print(f"csv,tts_{r['template']}_{r['mem']},"
               f"{r['time_to_solution']:.3f}")
 
+    _hdr("Fused time loop (steps/s, fused vs per-step; BENCH_timeloop.json)")
+    from benchmarks import timeloop as bench_timeloop
+    tl = bench_timeloop.run(fast=args.fast)
+    for name, r in tl.items():
+        print(f"csv,timeloop_{name}_steps_per_s,{r['fused_steps_per_s']:.1f}")
+        print(f"csv,timeloop_{name}_speedup,{r['speedup']:.2f}")
+
     _hdr("Productivity (paper Table 11 / §6.3)")
     from benchmarks import productivity
     pr = productivity.run()

@@ -1,0 +1,126 @@
+"""Fused vs per-step time-loop benchmark (the paper's time-to-solution
+metric over many steps, §6.2 Tables 6–8 measured end-to-end).
+
+For star2d1r and the acoustic-ISO 25-point stencil it runs N time steps
+
+  * per-step: the classic ``@st.target`` Python loop — one compiled call,
+    one host↔device sync and one dict repack per step, and
+  * fused: ``st.timeloop`` — the whole loop traced once into a single
+    ``lax.fori_loop`` program (one window),
+
+and reports steps/s and time-to-solution.  Results are written to
+``BENCH_timeloop.json`` so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.timeloop [--fast]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import acoustic, dsl as st, suite
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_timeloop.json")
+
+
+def _bench_star2d1r(steps: int, shape, repeats: int = 3) -> Dict:
+    k = suite.get_kernel("star2d1r")
+    swap = suite.swap_pair(k.name)
+
+    def mk():
+        return suite.make_grids("star2d1r", shape=shape)
+
+    @st.target
+    def per_step(u, v, iters):
+        for _ in range(iters):
+            st.map(e=u.shape)(k)(u, v)
+            (u.data, v.data) = (v.data, u.data)
+
+    def fused(u, v, iters):
+        return st.timeloop(iters, swap=swap)(k)(u, v)
+
+    run = st.launch(backend=st.xla())
+
+    def time_once(tgt):
+        g = mk()
+        run(tgt)(*g.values(), 2)             # warmup: codegen + compile
+        best = float("inf")
+        for _ in range(repeats):
+            g = mk()
+            t0 = time.perf_counter()
+            run(tgt)(*g.values(), steps)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_unfused = time_once(per_step)
+    t_fused = time_once(fused)
+    return {
+        "kernel": "star2d1r", "backend": "xla", "shape": list(shape),
+        "steps": steps,
+        "unfused_seconds": t_unfused,
+        "fused_seconds": t_fused,
+        "unfused_steps_per_s": steps / t_unfused,
+        "fused_steps_per_s": steps / t_fused,
+        "speedup": t_unfused / t_fused,
+    }
+
+
+def _bench_acoustic(steps: int, shape, repeats: int = 2) -> Dict:
+    def time_once(fuse):
+        acoustic.run(shape=shape, iters=2, with_source=False,
+                     fuse_steps=fuse)   # warmup
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            acoustic.run(shape=shape, iters=steps, with_source=False,
+                         fuse_steps=fuse)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_unfused = time_once(None)
+    t_fused = time_once(steps)
+    return {
+        "kernel": "acoustic_iso_3d", "backend": "xla", "shape": list(shape),
+        "steps": steps,
+        "unfused_seconds": t_unfused,
+        "fused_seconds": t_fused,
+        "unfused_steps_per_s": steps / t_unfused,
+        "fused_steps_per_s": steps / t_fused,
+        "speedup": t_unfused / t_fused,
+    }
+
+
+def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
+    steps = 30 if fast else 100
+    results = {
+        "star2d1r": _bench_star2d1r(steps, (128, 128) if fast else (256, 256)),
+        "acoustic_iso_3d": _bench_acoustic(
+            steps, (24, 24, 24) if fast else (48, 48, 48)),
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    if verbose:
+        for name, r in results.items():
+            print(f"{name:16s} {r['steps']:4d} steps  "
+                  f"per-step {r['unfused_steps_per_s']:8.1f} steps/s  "
+                  f"fused {r['fused_steps_per_s']:8.1f} steps/s  "
+                  f"speedup {r['speedup']:.2f}x", flush=True)
+        print(f"wrote {OUT_PATH}")
+    return results
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    return run(fast=args.fast)
+
+
+if __name__ == "__main__":
+    main()

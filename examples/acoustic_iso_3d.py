@@ -36,7 +36,8 @@ def run(args):
 
     t0 = time.perf_counter()
     p, prof = acoustic.run(shape=shape, iters=args.iters, backend=backend,
-                           mesh=mesh, pml_width=args.pml)
+                           mesh=mesh, pml_width=args.pml,
+                           fuse_steps=args.fuse)
     wall = time.perf_counter() - t0
     w = np.asarray(p.interior)
     pts = np.prod(shape) * args.iters
@@ -62,6 +63,9 @@ def main():
     ap.add_argument("--template", default=None,
                     choices=[None, "gmem", "smem", "f4", "shift", "unroll",
                              "semi"])
+    ap.add_argument("--fuse", type=int, default=None, metavar="K",
+                    help="fused time stepping: run K steps per compiled "
+                         "program (source injected at window boundaries)")
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--_child", action="store_true")
     args = ap.parse_args()
@@ -75,7 +79,8 @@ def main():
         sys.exit(subprocess.call(
             [sys.executable, os.path.abspath(__file__), "--_child",
              "--distributed", "--iters", str(args.iters), "--pml",
-             str(args.pml), "--shape", *map(str, args.shape)], env=env))
+             str(args.pml), "--shape", *map(str, args.shape)]
+            + (["--fuse", str(args.fuse)] if args.fuse else []), env=env))
     run(args)
 
 

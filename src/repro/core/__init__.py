@@ -2,7 +2,8 @@
 
 ``from repro.core import dsl as st`` gives the user-facing DSL (paper
 Table 1); submodules: frontend (parser), ir, analysis, lowering (xla
-backend), distributed (multi-chip halo exchange), suite (paper Table 4
-kernel suite), regions (PML decomposition), autotune.
+backend), timeloop (fused time-stepping engine), distributed (multi-chip
+halo exchange), suite (paper Table 4 kernel suite), regions (PML
+decomposition), autotune.
 """
-from . import analysis, dsl, frontend, ir, lowering  # noqa: F401
+from . import analysis, dsl, frontend, ir, lowering, timeloop  # noqa: F401

@@ -7,8 +7,17 @@ time-to-solution, the paper's own metric).
     st.launch(backend=best.backend)(target)(...)
 
 The search space mirrors Table 6's configuration column: template ×
-block (Dx/Dy/Dz) × mem_type × prefetch.  Results are cached per
-(kernel, interior shape, dtype) so repeated launches pay once.
+block (Dx/Dy/Dz) × mem_type × prefetch.  When a ``swap`` pair is given,
+the tuner measures fused time-loop execution instead of single
+applications and searches the fusion-window size ``fuse_steps`` alongside
+the backend knobs::
+
+    best = autotune.tune(kernel, grids, swap=("v", "u"), steps=32)
+    st.launch(backend=best.backend, fuse_steps=best.fuse_steps)(target)(...)
+
+Results are cached per (kernel, grid geometry, search space, iters,
+time-loop configuration) so repeated launches pay once; a custom ``space``
+or ``iters`` gets its own cache entry (``clear_cache()`` resets).
 """
 from __future__ import annotations
 
@@ -25,11 +34,17 @@ from . import dsl as st
 _CACHE: Dict = {}
 
 
+def clear_cache() -> None:
+    """Drop all memoized tuning results."""
+    _CACHE.clear()
+
+
 @dataclasses.dataclass
 class TuneResult:
     backend: st.Backend
     seconds: float
-    trials: List[Tuple[st.Backend, float]]
+    trials: List[Tuple[st.Backend, int, float]]  # (backend, fuse_steps, s)
+    fuse_steps: int = 1
 
 
 def default_space(ndim: int, interior: Sequence[int]) -> List[st.Backend]:
@@ -49,6 +64,31 @@ def default_space(ndim: int, interior: Sequence[int]) -> List[st.Backend]:
             if t == "semi" and m == "registers":
                 continue
             out.append(st.pallas(template=t, block=b, mem_type=m))
+    return out
+
+
+def _normalize_space(space, ndim, interior, swap, steps, fuse_space):
+    """Expand the search space into (backend, fuse_steps) candidates."""
+    base = space or default_space(ndim, interior)
+    cands: List[Tuple[st.Backend, int]] = []
+    for entry in base:
+        if isinstance(entry, tuple):
+            b, f = entry
+            # without a swap pair only single applications are measured, so
+            # a requested window size would be reported but never timed
+            cands.append((b, max(1, int(f)) if swap is not None else 1))
+        elif swap is not None:
+            for f in fuse_space:
+                cands.append((entry, max(1, min(int(f), steps))))
+        else:
+            cands.append((entry, 1))
+    # dedup while preserving order
+    seen, out = set(), []
+    for b, f in cands:
+        key = (b.cache_key(), f)
+        if key not in seen:
+            seen.add(key)
+            out.append((b, f))
     return out
 
 
@@ -75,21 +115,76 @@ def _measure(kernel: st.Kernel, grids: Dict[str, st.grid], backend,
     return float(np.median(times))
 
 
+def _measure_timeloop(kernel: st.Kernel, grids: Dict[str, st.grid],
+                      backend, fuse: int, steps: int, swap, iters: int) -> float:
+    """Median wall time-to-solution of ``steps`` fused time steps."""
+    gs = {n: g.copy() for n, g in grids.items()}
+
+    def tgt(*args):
+        return st.timeloop(steps, swap=swap, fuse_steps=fuse)(kernel)(*args)
+
+    run = st.launch(backend=backend)
+    args = tuple(gs.values())
+    try:
+        run(tgt)(*args)                      # warmup: codegen + compile
+    except Exception:
+        return float("inf")
+    times = []
+    for _ in range(iters):
+        times.append(run(tgt)(*args).value.seconds)
+    return float(np.median(times))
+
+
+def _space_key(space):
+    if space is None:
+        return None
+    out = []
+    for entry in space:
+        if isinstance(entry, tuple):
+            b, f = entry
+            out.append((b.cache_key(), int(f)))
+        else:
+            out.append((entry.cache_key(), None))
+    return tuple(out)
+
+
 def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
-         space: Optional[List[st.Backend]] = None,
-         verbose: bool = False) -> TuneResult:
+         space: Optional[List] = None,
+         verbose: bool = False,
+         swap: Optional[Tuple[str, str]] = None,
+         steps: int = 16,
+         fuse_space: Sequence[int] = (1, 4, 16)) -> TuneResult:
+    """Grid-search the backend (and, with ``swap``, the fusion window).
+
+    ``space`` entries may be plain backends or ``(backend, fuse_steps)``
+    pairs.  Without ``swap`` the tuner measures single kernel applications;
+    with ``swap`` it measures ``steps`` fused time-loop steps per candidate
+    and searches ``fuse_space`` window sizes for each backend.
+    """
     g0 = next(iter(grids.values()))
-    key = (kernel.name, g0.shape, str(g0.dtype))
+    key = (kernel.name,
+           tuple(sorted((n, g.shape, g.order, str(g.dtype))
+                        for n, g in grids.items())),
+           int(iters), _space_key(space),
+           tuple(swap) if swap else None,
+           int(steps) if swap else None,
+           tuple(int(f) for f in fuse_space) if swap else None)
     if key in _CACHE:
         return _CACHE[key]
-    space = space or default_space(kernel.info.ndim, g0.shape)
+    cands = _normalize_space(space, kernel.info.ndim, g0.shape, swap,
+                             steps, fuse_space)
     trials = []
-    for backend in space:
-        dt = _measure(kernel, grids, backend, iters)
-        trials.append((backend, dt))
+    for backend, fuse in cands:
+        if swap is None:
+            dt = _measure(kernel, grids, backend, iters)
+        else:
+            dt = _measure_timeloop(kernel, grids, backend, fuse, steps,
+                                   swap, iters)
+        trials.append((backend, fuse, dt))
         if verbose:
-            print(f"  {backend}: {dt:.4f}s", flush=True)
-    best = min(trials, key=lambda t: t[1])
-    result = TuneResult(backend=best[0], seconds=best[1], trials=trials)
+            print(f"  {backend} fuse={fuse}: {dt:.4f}s", flush=True)
+    best = min(trials, key=lambda t: t[2])
+    result = TuneResult(backend=best[0], seconds=best[2], trials=trials,
+                        fuse_steps=best[1])
     _CACHE[key] = result
     return result

@@ -43,10 +43,10 @@ from . import ir as _ir
 from . import lowering as _lowering
 
 __all__ = [
-    "grid", "kernel", "target", "map", "launch",
+    "grid", "kernel", "target", "map", "timeloop", "launch",
     "f32", "f64", "bf16", "i32", "i64",
     "xla", "pallas", "tpu", "cuda", "distributed",
-    "Kernel", "LaunchResult",
+    "Kernel", "LaunchResult", "TimeloopResult",
 ]
 
 
@@ -109,7 +109,8 @@ class grid:
     # -- init helpers --------------------------------------------------------
     def randomize(self, seed: int = 0, scale: float = 1.0) -> "grid":
         rng = np.random.default_rng(seed)
-        self.interior = (scale * rng.standard_normal(self.shape)).astype(np.float32)
+        vals = scale * rng.standard_normal(self.shape)
+        self.interior = np.asarray(vals, dtype=np.dtype(self.dtype))
         return self
 
     def copy(self) -> "grid":
@@ -234,6 +235,7 @@ class _Ctx(threading.local):
         self.mesh = None
         self.profile: Dict[str, float] = {}
         self.active = False
+        self.fuse_steps: Optional[int] = None
 
     def add(self, phase: str, dt: float):
         self.profile[phase] = self.profile.get(phase, 0.0) + dt
@@ -269,7 +271,9 @@ def map(begin=None, end=None, e=None) -> _MapCall:  # noqa: A001 (paper name)
     return _MapCall(begin=begin, end=end, e=e)
 
 
-def _apply_kernel(k: Kernel, args, begin, end):
+def _bind_args(k: Kernel, args):
+    """Split positional args into (grids dict, scalars dict) per the kernel
+    signature, checking types and interior-shape consistency."""
     grids: Dict[str, grid] = {}
     scalars: Dict[str, object] = {}
     gi = 0
@@ -289,6 +293,12 @@ def _apply_kernel(k: Kernel, args, begin, end):
     for g in grids.values():
         if g.shape != interior:
             raise ValueError("all grids in one map must share interior shape")
+    return grids, scalars
+
+
+def _apply_kernel(k: Kernel, args, begin, end):
+    grids, scalars = _bind_args(k, args)
+    interior = next(iter(grids.values())).shape
 
     region = None
     if begin is not None:
@@ -314,6 +324,110 @@ def _apply_kernel(k: Kernel, args, begin, end):
     for name in k.ir.output_grids():
         grids[name].data = out[name]
     return None
+
+
+# --------------------------------------------------------------------------
+# timeloop — fused time stepping (kernel application + buffer swap)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class TimeloopResult:
+    steps: int
+    fuse_steps: int
+    windows: int
+    seconds: float
+
+    @property
+    def steps_per_s(self) -> float:
+        return self.steps / self.seconds if self.seconds > 0 else float("inf")
+
+
+class _TimeloopCall:
+    def __init__(self, steps: int, swap=None, fuse_steps=None, between=None):
+        self.steps = int(steps)
+        self.swap = tuple(swap) if swap is not None else None
+        self.fuse_steps = fuse_steps
+        self.between = between
+
+    def __call__(self, k: Kernel):
+        def apply(*args) -> TimeloopResult:
+            return _run_timeloop(k, args, self)
+        return apply
+
+
+def timeloop(steps: int, swap=None, fuse_steps: Optional[int] = None,
+             between=None) -> _TimeloopCall:
+    """Fused time stepping: ``steps`` applications of the kernel plus the
+    leapfrog buffer swap, traced once and executed inside a single compiled
+    program per fusion window (paper-style time-to-solution execution;
+    see ``core/timeloop.py``)::
+
+        @st.target
+        def run(u: st.grid, v: st.grid, iters: st.i32):
+            st.timeloop(iters, swap=("v", "u"))(star2d1r)(u, v)
+
+    ``swap`` names the grid pair whose buffers rotate after every step (the
+    pair must contain the kernel's output grid).  ``fuse_steps`` is the
+    fusion-window size: the host syncs (and the optional ``between(t,
+    grids)`` hook runs) only every ``fuse_steps`` steps.  Default: fuse the
+    whole loop, or the enclosing ``st.launch(..., fuse_steps=K)`` value.
+    Equivalent to the per-step ``st.map`` loop up to float-accumulation
+    order (identical when fuse_steps=1).
+    """
+    return _TimeloopCall(steps, swap=swap, fuse_steps=fuse_steps,
+                         between=between)
+
+
+def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
+    from . import timeloop as _tl
+
+    grids, scalars = _bind_args(k, args)
+    interior = next(iter(grids.values())).shape
+    backend = _CTX.backend if _CTX.active else xla()
+    mesh = _CTX.mesh if _CTX.active else None
+    fuse = call.fuse_steps
+    if fuse is None and _CTX.active:
+        fuse = _CTX.fuse_steps
+    if fuse is None:
+        fuse = call.steps
+    fuse = max(1, min(int(fuse), max(int(call.steps), 1)))
+    swap = _tl.normalize_swap(k.ir, call.swap)
+
+    key = ("timeloop", backend.cache_key(),
+           tuple(sorted((n, g.shape, g.order, str(g.dtype))
+                        for n, g in grids.items())),
+           swap, id(mesh) if mesh is not None else None)
+    engine = k._cache.get(key)
+    if engine is None:
+        t0 = time.perf_counter()
+        halos = {n: g.halo for n, g in grids.items()}
+        engine = _tl.TimeloopEngine(
+            k.ir, halos, interior, backend, swap=swap, mesh=mesh,
+            profile_cb=_CTX.add if _CTX.active else None)
+        _CTX.add("codegen", time.perf_counter() - t0)
+        k._cache[key] = engine
+    if engine.max_fuse is not None:
+        # distributed overlapped tiling bounds the window (k·h ≤ local
+        # extent); report the window size that actually runs
+        fuse = min(fuse, engine.max_fuse)
+
+    def between_arrays(t, arrays):
+        # surface current state to the user hook via the grid objects
+        for n, g in grids.items():
+            g.data = arrays[n]
+        call.between(t, grids)
+        return {n: g.data for n, g in grids.items()}
+
+    arrays = {n: g.data for n, g in grids.items()}
+    t0 = time.perf_counter()
+    arrays = engine.run(arrays, scalars, call.steps, fuse,
+                        between_arrays if call.between else None)
+    seconds = time.perf_counter() - t0
+    for n, g in grids.items():
+        g.data = arrays[n]
+    return TimeloopResult(
+        steps=call.steps, fuse_steps=fuse,
+        windows=-(-call.steps // fuse) if call.steps else 0,
+        seconds=seconds)
 
 
 def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region):
@@ -365,24 +479,34 @@ def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region)
 # launch
 # --------------------------------------------------------------------------
 class _Launcher:
-    def __init__(self, backend: Backend, mesh=None, profile: bool = True):
+    def __init__(self, backend: Backend, mesh=None, profile: bool = True,
+                 fuse_steps: Optional[int] = None):
         self.backend, self.mesh, self.profile = backend, mesh, profile
+        self.fuse_steps = fuse_steps
 
     def __call__(self, tgt: Callable):
         def run(*args, **kw) -> LaunchResult:
-            prev = (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active)
+            prev = (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
+                    _CTX.fuse_steps)
             _CTX.backend, _CTX.mesh = self.backend, self.mesh
             _CTX.profile, _CTX.active = {}, True
+            _CTX.fuse_steps = self.fuse_steps
             t0 = time.perf_counter()
             try:
                 value = tgt(*args, **kw)
             finally:
                 prof = _CTX.profile
                 prof["total"] = time.perf_counter() - t0
-                _CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active = prev
+                (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
+                 _CTX.fuse_steps) = prev
             return LaunchResult(value=value, profile=prof)
         return run
 
 
-def launch(backend: Backend = None, mesh=None, profile: bool = True) -> _Launcher:
-    return _Launcher(backend or xla(), mesh=mesh, profile=profile)
+def launch(backend: Backend = None, mesh=None, profile: bool = True,
+           fuse_steps: Optional[int] = None) -> _Launcher:
+    """Run a ``@st.target`` under ``backend``.  ``fuse_steps`` sets the
+    default fusion-window size for any ``st.timeloop`` inside the target
+    (per-step ``st.map`` loops are unaffected)."""
+    return _Launcher(backend or xla(), mesh=mesh, profile=profile,
+                     fuse_steps=fuse_steps)

@@ -15,6 +15,7 @@ from functools import partial
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
+from jax import lax
 
 from . import ir
 
@@ -123,3 +124,34 @@ def lower_jax(kernel: ir.StencilIR,
                               region_shape, dtype)
 
     return fn
+
+
+def lower_jax_window(kernel: ir.StencilIR,
+                     halos: Mapping[str, Tuple[int, ...]],
+                     interior_shape: Tuple[int, ...],
+                     region: Optional[Tuple[Tuple[int, int], ...]],
+                     swap: Optional[Tuple[str, str]],
+                     steps: int):
+    """Fused time-loop window on the XLA backend: ``steps`` applications of
+    the kernel plus the leapfrog buffer rotation, executed inside a single
+    ``lax.fori_loop`` program (one compiled call per fusion window instead
+    of one per time step — no host sync, no per-step dict repack).
+
+    ``swap`` is the (written, other) grid pair whose buffers rotate after
+    each application (None → no rotation).  Returns
+    ``fn(arrays, scalars) -> arrays`` — pure and jittable, so the caller
+    can donate the input buffers.
+    """
+    step_fn = lower_jax(kernel, halos, interior_shape, region)
+
+    def window(arrays: Dict[str, jnp.ndarray],
+               scalars: Mapping[str, jnp.ndarray]):
+        def body(_, arrs):
+            out = step_fn(arrs, scalars)
+            if swap is not None:
+                out = dict(out)
+                out[swap[0]], out[swap[1]] = out[swap[1]], out[swap[0]]
+            return out
+        return lax.fori_loop(0, steps, body, dict(arrays))
+
+    return window

@@ -13,7 +13,8 @@ from typing import Dict, Tuple
 
 from . import dsl as st
 
-__all__ = ["get_kernel", "KERNEL_NAMES", "kernel_meta"]
+__all__ = ["get_kernel", "KERNEL_NAMES", "kernel_meta", "make_grids",
+           "swap_pair"]
 
 
 def _fmt(x: float) -> str:
@@ -128,3 +129,23 @@ def kernel_meta(name: str):
     """(ndim, shape, order) for reporting (paper Table 4 columns)."""
     k = get_kernel(name)
     return k.info.ndim, k.info.shape, k.info.order
+
+
+def make_grids(name: str, shape: Tuple[int, ...] = None,
+               seed: int = 0) -> Dict[str, st.grid]:
+    """Ready-to-launch grids for a suite kernel (randomized interiors,
+    zero halos), keyed by the kernel's grid-parameter names — the common
+    setup for the time-loop benchmarks and the autotuner."""
+    k = get_kernel(name)
+    if shape is None:
+        shape = (64, 64) if k.info.ndim == 2 else (16, 16, 32)
+    return {g: st.grid(dtype=st.f32, shape=shape,
+                       order=k.info.order).randomize(seed + i)
+            for i, g in enumerate(k.ir.grid_params)}
+
+
+def swap_pair(name: str) -> Tuple[str, str]:
+    """The (written, read) leapfrog buffer pair of a suite kernel —
+    every suite kernel is ``u → v``, so this is ``("v", "u")``."""
+    k = get_kernel(name)
+    return (k.ir.output_grids()[0], k.ir.input_grids()[0])

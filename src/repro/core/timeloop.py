@@ -1,0 +1,233 @@
+"""Fused time-loop execution engine: single-program time stepping.
+
+The per-step path (``st.map`` inside a Python loop) pays one compiled call,
+one host↔device sync and one dict-of-arrays repack per time step — and on
+the Pallas path a full ``jnp.pad`` halo repack per grid per step.  Devito
+and the Cerebras stencil work both show that fusing the time dimension into
+the generated program is where stencil throughput lives; this module is
+that fusion for all three backends:
+
+  xla          — ``steps`` applications + leapfrog buffer rotation run in
+                 one jitted ``lax.fori_loop`` program with donated buffers
+                 (``lowering.lower_jax_window``).
+  pallas       — lowering is split into a one-time layout stage (grids →
+                 persistent block-padded layout, ONE ``jnp.pad`` per grid
+                 per fusion window) and a per-step kernel stage executed
+                 inside the fused loop (``codegen.plan_pallas``); outputs
+                 are written in-place in padded layout and the grid halo is
+                 passed through, so no repacking happens between steps.
+  distributed  — a fusion window maps onto the overlapped-tiling /
+                 time-skewed program (one k·h-wide halo exchange covers k
+                 kernel applications), unifying ``fuse_steps`` with the
+                 backend's pre-existing ``time_steps`` knob.
+
+The host syncs only at fusion-window boundaries; an optional ``between``
+hook runs there (e.g. acoustic source injection).
+
+This module is DSL-agnostic: it works on dicts of jnp arrays.  The user
+API is ``st.timeloop(...)`` / ``st.launch(..., fuse_steps=K)`` in
+``core/dsl.py``; the array-level wrapper is
+``repro.kernels.stencil.ops.stencil_timeloop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ir as _ir
+from . import lowering
+
+
+def normalize_swap(kernel: _ir.StencilIR,
+                   swap: Optional[Tuple[str, str]]) -> Optional[Tuple[str, str]]:
+    """Validate and orient a swap pair as (written, other)."""
+    if swap is None:
+        return None
+    a, b = swap
+    params = set(kernel.grid_params)
+    for g in (a, b):
+        if g not in params:
+            raise ValueError(f"swap grid '{g}' is not a kernel parameter")
+    outs = set(kernel.output_grids())
+    wr = [g for g in (a, b) if g in outs]
+    if len(wr) != 1:
+        raise ValueError(
+            f"swap pair {swap} must contain exactly one output grid "
+            f"(outputs: {sorted(outs)})")
+    written = wr[0]
+    other = b if written == a else a
+    return (written, other)
+
+
+def _rotate(arrays: Dict[str, jnp.ndarray], swap) -> Dict[str, jnp.ndarray]:
+    out = dict(arrays)
+    out[swap[0]], out[swap[1]] = out[swap[1]], out[swap[0]]
+    return out
+
+
+def _donate_ok() -> bool:
+    # CPU jit does not implement buffer donation (warns and copies)
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+class TimeloopEngine:
+    """Backend-specific fused window programs for one (kernel, geometry).
+
+    ``run(arrays, scalars, steps, fuse_steps, between)`` executes ``steps``
+    applications of the kernel (+ buffer rotation when ``swap`` is set) in
+    fusion windows of ``fuse_steps``, syncing with the host only at window
+    boundaries.  Returns the final arrays dict (same naming convention as
+    the per-step path: after each step the ``swap`` names trade buffers).
+    """
+
+    def __init__(self, kernel: _ir.StencilIR,
+                 halos: Mapping[str, Tuple[int, ...]],
+                 interior_shape: Tuple[int, ...],
+                 backend,
+                 swap: Optional[Tuple[str, str]] = None,
+                 mesh=None,
+                 profile_cb: Optional[Callable[[str, float], None]] = None):
+        self.kernel = kernel
+        self.halos = {g: tuple(h) for g, h in halos.items()}
+        self.interior = tuple(interior_shape)
+        self.backend = backend
+        self.swap = normalize_swap(kernel, swap)
+        self.mesh = mesh
+        self._profile_cb = profile_cb
+        self._windows: Dict[int, Callable] = {}
+        self._plan = None
+        if backend.kind == "pallas":
+            from repro.kernels.stencil import codegen as _codegen
+            # (plan construction time is charged to "codegen" by the caller)
+            self._plan = _codegen.plan_pallas(
+                kernel, self.halos, self.interior, backend, swap=self.swap)
+        elif backend.kind not in ("xla", "distributed"):
+            raise ValueError(f"timeloop: unsupported backend {backend.kind}")
+        if backend.kind == "distributed" and self.swap is None:
+            raise ValueError("distributed timeloop requires swap=(a, b)")
+        # overlapped tiling bound: a k-step window exchanges k·h-wide halos,
+        # which must fit in the local shard extent on every decomposed axis
+        self.max_fuse: Optional[int] = None
+        if backend.kind == "distributed":
+            from . import analysis as _analysis
+            info = _analysis.analyze(kernel)
+            h_max = max(info.halo) if info.halo else 0
+            if h_max and mesh is not None:
+                lim = None
+                for ax, m in enumerate(backend.grid_axes):
+                    if m is None:
+                        continue
+                    local = interior_shape[ax] // mesh.shape[m]
+                    lim = local // h_max if lim is None \
+                        else min(lim, local // h_max)
+                self.max_fuse = max(1, lim) if lim is not None else None
+
+    # -- helpers -----------------------------------------------------------
+    def _add(self, phase: str, dt: float) -> None:
+        if self._profile_cb is not None:
+            self._profile_cb(phase, dt)
+
+    def _window(self, kw: int) -> Callable:
+        """Compiled fused program for a window of ``kw`` steps."""
+        fn = self._windows.get(kw)
+        if fn is not None:
+            return fn
+        t0 = time.perf_counter()
+        donate = (0,) if _donate_ok() else ()
+        if self.backend.kind == "xla":
+            win = lowering.lower_jax_window(
+                self.kernel, self.halos, self.interior, None, self.swap, kw)
+            fn = jax.jit(win, donate_argnums=donate)
+        elif self.backend.kind == "pallas":
+            plan, swap = self._plan, self.swap
+
+            def win(padded, scalars):
+                from jax import lax
+
+                def body(_, p):
+                    out = plan.step(p, scalars)
+                    return _rotate(out, swap) if swap else out
+                return lax.fori_loop(0, kw, body, dict(padded))
+            fn = jax.jit(win, donate_argnums=donate)
+        else:  # distributed
+            from . import distributed as _dist
+            be = self.backend
+            if kw > 1:
+                be = dataclasses.replace(be, time_steps=kw, swap=self.swap,
+                                         overlap=False)
+            else:
+                be = dataclasses.replace(be, time_steps=1, swap=None)
+            fn = _dist.lower_distributed(self.kernel, self.halos,
+                                         self.interior, None, be, self.mesh)
+        self._add("comp", time.perf_counter() - t0)
+        self._windows[kw] = fn
+        return fn
+
+    # -- driver ------------------------------------------------------------
+    def run(self, arrays: Dict[str, jnp.ndarray],
+            scalars: Mapping[str, jnp.ndarray],
+            steps: int,
+            fuse_steps: Optional[int] = None,
+            between: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
+        fuse = int(fuse_steps or steps)
+        if fuse < 1:
+            raise ValueError("fuse_steps must be >= 1")
+        if self.max_fuse is not None:
+            fuse = min(fuse, self.max_fuse)
+        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+        arrays = dict(arrays)
+        t = 0
+        while t < steps:
+            kw = min(fuse, steps - t)
+            t0 = time.perf_counter()
+            arrays = self._run_window(arrays, scal, kw)
+            jax.block_until_ready(arrays)
+            self._add("kernel", time.perf_counter() - t0)
+            t += kw
+            if between is not None and t < steps:
+                arrays = between(t, arrays) or arrays
+        return arrays
+
+    def _run_window(self, arrays, scal, kw):
+        if self.backend.kind == "xla":
+            return self._window(kw)(arrays, scal)
+        if self.backend.kind == "pallas":
+            plan = self._plan
+            t0 = time.perf_counter()
+            padded = plan.to_padded(arrays)         # ONE pad/grid/window
+            self._add("layout", time.perf_counter() - t0)
+            padded = self._window(kw)(padded, scal)
+            # the device program rotated padded buffers kw times; apply the
+            # same parity to the full host arrays so halos travel with
+            # their buffers, then write the padded interiors back
+            if self.swap and kw % 2:
+                arrays = _rotate(arrays, self.swap)
+            return plan.from_padded(padded, arrays)
+        # distributed: the k-step (time-skewed for kw>1) program does its
+        # own internal rotation for kw>1; rotate host-side for kw==1
+        out = self._window(kw)(arrays, scal)
+        if kw == 1 and self.swap:
+            out = _rotate(out, self.swap)
+        return out
+
+
+def run_timeloop(kernel: _ir.StencilIR,
+                 arrays: Dict[str, jnp.ndarray],
+                 scalars: Mapping[str, jnp.ndarray],
+                 steps: int,
+                 *,
+                 halos: Mapping[str, Tuple[int, ...]],
+                 interior_shape: Tuple[int, ...],
+                 backend,
+                 swap: Optional[Tuple[str, str]] = None,
+                 fuse_steps: Optional[int] = None,
+                 between: Optional[Callable] = None,
+                 mesh=None) -> Dict[str, jnp.ndarray]:
+    """One-shot convenience wrapper (builds a fresh engine)."""
+    eng = TimeloopEngine(kernel, halos, interior_shape, backend,
+                         swap=swap, mesh=mesh)
+    return eng.run(dict(arrays), scalars, steps, fuse_steps, between)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(prev_ref, cur_ref, w_ref, out_ref, *, cw: int, bt: int):
     prev = prev_ref[...]
@@ -57,7 +59,7 @@ def causal_conv1d_pallas(x: jnp.ndarray, w: jnp.ndarray, *,
         out_shape=jax.ShapeDtypeStruct((B, Tp, Wp), x.dtype),
         interpret=interpret,
         name="causal_conv1d",
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary")),
     )(xp, xp, wp)   # padded array feeds both the prev- and cur-block refs
     return out[:, :T, :W]

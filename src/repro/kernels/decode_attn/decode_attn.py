@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, bs: int, scale: float):
@@ -97,7 +99,7 @@ def decode_attention_pallas(q, k, v, lengths, *, block_s: int = 512,
         ],
         interpret=interpret,
         name="flash_decode_attention",
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(lengths, qg, k, v)
     return out.reshape(B, H, hd)

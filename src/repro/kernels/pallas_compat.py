@@ -1,0 +1,12 @@
+"""Version-tolerance shims for the Pallas TPU API.
+
+The installed JAX exposes the TPU compiler-params dataclass under either
+``pltpu.CompilerParams`` (newer) or ``pltpu.TPUCompilerParams`` (older);
+every Pallas kernel in this repo goes through this one lookup.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = (getattr(pltpu, "CompilerParams", None)
+                  or pltpu.TPUCompilerParams)

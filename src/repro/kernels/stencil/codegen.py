@@ -27,11 +27,27 @@ wrapper below), so every neighbor-block index `g+1+δ` is in bounds and no
 boundary conditionals appear inside the kernel — this is the consolidation
 the paper's §6.2.1 'future work' asks for (one set of conditionals → zero).
 
+Two execution modes share the template bodies:
+
+  * ``lower_pallas`` — the original per-application path: pad inputs into
+    block-padded layout, run one ``pallas_call``, merge outputs back into
+    the unpadded arrays.  One ``jnp.pad`` per grid per application.
+  * ``plan_pallas`` → :class:`PallasPlan` — the fused time-loop path.
+    Lowering is split into a one-time *layout* stage (``to_padded``: one
+    ``jnp.pad`` per grid per fusion window) and a per-step *kernel* stage
+    (``step``: a single ``pallas_call`` whose outputs are written in-place
+    in padded layout via ``input_output_aliases``; positions outside the
+    true interior pass the old value through, so the grid halo survives
+    across steps with no repacking).  Per-grid operands are deduplicated:
+    each padded grid is passed once and fetched as a halo'd window
+    (``pl.Unblocked`` BlockSpec) instead of once per neighbor delta.
+
 The expression evaluator is shared with the XLA lowering
 (`repro.core.lowering.eval_expr`), so all backends execute the same IR.
 """
 from __future__ import annotations
 
+import collections
 import functools
 import itertools
 import math
@@ -47,6 +63,16 @@ from repro.core import analysis, ir, lowering
 
 DEFAULT_BLOCK = {2: (8, 128), 3: (8, 8, 128)}
 STREAM_BLOCK = {2: (16, 128), 3: (16, 8, 128)}
+
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+# counts eager ``jnp.pad`` layout conversions per grid name; the fused path
+# must show exactly one per grid per fusion window (tests/test_timeloop.py)
+PAD_COUNT: collections.Counter = collections.Counter()
+
+
+def reset_pad_count() -> None:
+    PAD_COUNT.clear()
 
 
 def _round_up(x: int, m: int) -> int:
@@ -207,36 +233,178 @@ def _make_body_blocked(kernel, info, spec, use_scratch: bool):
     return body
 
 
-def _make_body_streaming(kernel, info, spec, *, variant: str,
-                         mem_type: str, prefetch: bool):
-    """shift / unroll / semi bodies: 2.5D streaming along axis 0."""
+def _semi_linearize(kernel):
+    """Linearize for the semi template: out_grid -> ([(grid, offs,
+    coeff_expr)], const_expr), plus the streaming halo H.  Coefficients may
+    contain center-only taps (coefficient *fields*, e.g. vp² in acoustic
+    ISO) — evaluated per output plane by the streaming loop."""
+    lin = {}
+    written = set()
+    for a in analysis.inline_locals(kernel):
+        terms, const = analysis.linearize(a.expr, allow_center_fields=True)
+        for t in ir.StencilIR(kernel.name, kernel.ndim, kernel.grid_params,
+                              kernel.scalar_params, (a,)).taps():
+            if t.grid in written:
+                raise ValueError("semi template does not support reading "
+                                 "a previously-written grid")
+        written.add(a.grid)
+        lin[a.grid] = ([(g, offs, c) for (g, offs), c in terms.items()],
+                       const)
+    H = max((abs(offs[0]) for terms, _ in lin.values()
+             for _, offs, _ in terms), default=0)
+    return lin, H
+
+
+def _stream_halo(kernel, spec, variant):
+    """(lin, H) for a streaming body: the x-axis window halo and, for semi,
+    the linearized form."""
+    if variant == "semi":
+        return _semi_linearize(kernel)
+    gh, in_grids = spec["gh"], spec["in_grids"]
+    return None, max((gh[g][0] for g in in_grids), default=0)
+
+
+def _stream_outputs(kernel, spec, tiles, scalars, *, variant: str,
+                    mem_type: str, H: int, lin):
+    """Run the 2.5D streaming loop over per-grid x-column ``tiles`` (x-halo
+    ``H``, per-grid y/z halo) and return the output blocks (shape B), one
+    per ``spec['out_grids']`` entry.  Shared by the per-application bodies
+    (tiles assembled from neighbor-block refs) and the fused bodies (tiles
+    sliced straight from the halo'd input window)."""
     B, gh, ndim = spec["B"], spec["gh"], spec["ndim"]
-    in_index, scal_names, out_grids, dtype = (
-        spec["in_index"], spec["scal_names"], spec["out_grids"], spec["dtype"])
+    out_grids, dtype = spec["out_grids"], spec["dtype"]
     in_grids = spec["in_grids"]
     plane_shape = tuple(B[1:])
     bx = B[0]
 
+    def plane(g, t):
+        """Input plane at tile-x index t, full y/z halo extent."""
+        return lax.dynamic_slice_in_dim(tiles[g], t, 1, axis=0)[0]
+
+    def center_yz(g, arr, offs_yz):
+        h = gh[g][1:]
+        idx = tuple(slice(h[ax] + offs_yz[ax], h[ax] + offs_yz[ax] + B[1 + ax])
+                    for ax in range(ndim - 1))
+        return arr[idx]
+
     if variant == "semi":
-        # linearize: out_grid -> ([(grid, offs, coeff_expr)], const_expr).
-        # Coefficients may contain center-only taps (coefficient *fields*,
-        # e.g. vp² in acoustic ISO) — evaluated per output plane below.
-        lin = {}
-        written = set()
-        for a in analysis.inline_locals(kernel):
-            terms, const = analysis.linearize(a.expr, allow_center_fields=True)
-            for t in ir.StencilIR(kernel.name, kernel.ndim, kernel.grid_params,
-                                  kernel.scalar_params, (a,)).taps():
-                if t.grid in written:
-                    raise ValueError("semi template does not support reading "
-                                     "a previously-written grid")
-            written.add(a.grid)
-            lin[a.grid] = ([(g, offs, c) for (g, offs), c in terms.items()],
-                           const)
-        H = max((abs(offs[0]) for terms, _ in lin.values()
-                 for _, offs, _ in terms), default=0)
-    else:
-        H = max((gh[g][0] for g in in_grids), default=0)
+        def field_read_at(tile_idx):
+            """Read center-only coefficient-field taps at the plane with
+            the given (dynamic) tile-x index."""
+            def tr(g, offs):
+                return center_yz(g, plane(g, tile_idx),
+                                 tuple(offs[1:]))
+            return tr
+
+        def step(t, carry):
+            # Invariant: at start of step t, P[k] holds the partial sum
+            # for output plane (t - 2H + k).  Input plane at tile-x
+            # index t is region plane x_in = t - H; its term (g,offs=d)
+            # contributes coeff(x_in - d) * u[x_in] to out plane
+            # o = x_in - d (slot H - d, coeff-field tile idx t - d,
+            # clamped reads only ever reach never-emitted planes).
+            Ps, outs = carry
+            newPs, newouts = [], []
+            for og, P, out in zip(out_grids, Ps, outs):
+                terms, const = lin[og]
+                for (g, offs, c) in terms:
+                    d = offs[0]
+                    cval = lowering.eval_expr(
+                        c, field_read_at(t - d), scalars, {})
+                    contrib = cval * center_yz(g, plane(g, t), offs[1:])
+                    P = P.at[H - d].add(contrib)
+                cv = lowering.eval_expr(
+                    const, field_read_at(t - H), scalars, {})
+                done = P[0] + cv
+                o = t - 2 * H
+                out = lax.cond(
+                    o >= 0,
+                    lambda out=out, done=done, o=o:
+                        lax.dynamic_update_slice_in_dim(
+                            out, done[None], o, axis=0),
+                    lambda out=out: out)
+                P = jnp.concatenate(
+                    [P[1:], jnp.zeros((1,) + plane_shape, dtype)], axis=0)
+                newPs.append(P)
+                newouts.append(out)
+            return tuple(newPs), tuple(newouts)
+
+        Ps0 = tuple(jnp.zeros((2 * H + 1,) + plane_shape, dtype)
+                    for _ in out_grids)
+        outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+        _, outs = lax.fori_loop(0, bx + 2 * H, step, (Ps0, outs0))
+        return outs
+
+    # ---- shift / unroll ------------------------------------------------
+    win_len = {g: 2 * gh[g][0] + 1 for g in in_grids}
+
+    if mem_type == "vmem":
+        # stream straight from the VMEM tile: taps = dynamic plane slices
+        def compute_plane(t):
+            def tap_read(g, offs):
+                # tile x index of region plane t+offs[0]: t + H + offs[0]
+                p = plane(g, t + H + offs[0])
+                return center_yz(g, p, offs[1:])
+            return _exec_statements(kernel, tap_read, scalars,
+                                    plane_shape, dtype)
+
+        def step(t, outs):
+            env = compute_plane(t)
+            return tuple(
+                lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
+                for g, out in zip(out_grids, outs))
+
+        outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+        return lax.fori_loop(0, bx, step, outs0)
+
+    # mem_type == 'registers': rolling loop-carried window per grid.
+    # Invariant: after `advance` at step t, window slot k holds the
+    # plane at region coord t - hg0 + k (tile-x index t - hg0 + k + H).
+    def init_window(g):
+        n = win_len[g]
+        hg0 = gh[g][0]
+        planes = [jnp.zeros(tiles[g].shape[1:], dtype)]
+        for k in range(1, n):
+            planes.append(plane(g, H - hg0 + k - 1))
+        return jnp.stack(planes, axis=0)
+
+    def advance(W, new_plane):
+        if variant == "unroll":
+            return jnp.concatenate([W[1:], new_plane[None]], axis=0)
+        W = jnp.roll(W, -1, axis=0)
+        return W.at[-1].set(new_plane)
+
+    def step(t, carry):
+        Ws, outs = carry
+        # newest slot holds region plane t + hg0 → tile-x index t+hg0+H
+        Ws2 = tuple(advance(W, plane(g, t + gh[g][0] + H))
+                    for g, W in zip(in_grids, Ws))
+
+        def tap_read(g, offs):
+            W = Ws2[in_grids.index(g)]
+            slot = gh[g][0] + offs[0]
+            return center_yz(g, W[slot], offs[1:])
+
+        env = _exec_statements(kernel, tap_read, scalars, plane_shape, dtype)
+        outs = tuple(
+            lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
+            for g, out in zip(out_grids, outs))
+        return Ws2, outs
+
+    Ws0 = tuple(init_window(g) for g in in_grids)
+    outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
+    _, outs = lax.fori_loop(0, bx, step, (Ws0, outs0))
+    return outs
+
+
+def _make_body_streaming(kernel, info, spec, *, variant: str,
+                         mem_type: str, prefetch: bool):
+    """shift / unroll / semi bodies: 2.5D streaming along axis 0."""
+    B, gh = spec["B"], spec["gh"]
+    in_index, scal_names, out_grids, dtype = (
+        spec["in_index"], spec["scal_names"], spec["out_grids"], spec["dtype"])
+    in_grids = spec["in_grids"]
+    lin, H = _stream_halo(kernel, spec, variant)
 
     def body(*refs):
         n_in = len(in_index)
@@ -257,128 +425,8 @@ def _make_body_streaming(kernel, info, spec, *, variant: str,
             tiles[g] = _assemble_tile(read_block, g, spec["deltas"][g],
                                       B, gh[g], ht, dtype)
 
-        def plane(g, t):
-            """Input plane at tile-x index t, full y/z halo extent."""
-            return lax.dynamic_slice_in_dim(tiles[g], t, 1, axis=0)[0]
-
-        def center_yz(g, arr, offs_yz):
-            h = gh[g][1:]
-            idx = tuple(slice(h[ax] + offs_yz[ax], h[ax] + offs_yz[ax] + B[1 + ax])
-                        for ax in range(ndim - 1))
-            return arr[idx]
-
-        if variant == "semi":
-            def field_read_at(tile_idx):
-                """Read center-only coefficient-field taps at the plane with
-                the given (dynamic) tile-x index."""
-                def tr(g, offs):
-                    return center_yz(g, plane(g, tile_idx),
-                                     tuple(offs[1:]))
-                return tr
-
-            def step(t, carry):
-                # Invariant: at start of step t, P[k] holds the partial sum
-                # for output plane (t - 2H + k).  Input plane at tile-x
-                # index t is region plane x_in = t - H; its term (g,offs=d)
-                # contributes coeff(x_in - d) * u[x_in] to out plane
-                # o = x_in - d (slot H - d, coeff-field tile idx t - d,
-                # clamped reads only ever reach never-emitted planes).
-                Ps, outs = carry
-                newPs, newouts = [], []
-                for og, P, out in zip(out_grids, Ps, outs):
-                    terms, const = lin[og]
-                    for (g, offs, c) in terms:
-                        d = offs[0]
-                        cval = lowering.eval_expr(
-                            c, field_read_at(t - d), scalars, {})
-                        contrib = cval * center_yz(g, plane(g, t), offs[1:])
-                        P = P.at[H - d].add(contrib)
-                    cv = lowering.eval_expr(
-                        const, field_read_at(t - H), scalars, {})
-                    done = P[0] + cv
-                    o = t - 2 * H
-                    out = lax.cond(
-                        o >= 0,
-                        lambda out=out, done=done, o=o:
-                            lax.dynamic_update_slice_in_dim(
-                                out, done[None], o, axis=0),
-                        lambda out=out: out)
-                    P = jnp.concatenate(
-                        [P[1:], jnp.zeros((1,) + plane_shape, dtype)], axis=0)
-                    newPs.append(P)
-                    newouts.append(out)
-                return tuple(newPs), tuple(newouts)
-
-            Ps0 = tuple(jnp.zeros((2 * H + 1,) + plane_shape, dtype)
-                        for _ in out_grids)
-            outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
-            _, outs = lax.fori_loop(0, bx + 2 * H, step, (Ps0, outs0))
-            for out, oref in zip(outs, out_refs):
-                oref[...] = out
-            return
-
-        # ---- shift / unroll ------------------------------------------------
-        win_len = {g: 2 * gh[g][0] + 1 for g in in_grids}
-
-        if mem_type == "vmem":
-            # stream straight from the VMEM tile: taps = dynamic plane slices
-            def compute_plane(t):
-                def tap_read(g, offs):
-                    # tile x index of region plane t+offs[0]: t + H + offs[0]
-                    p = plane(g, t + H + offs[0])
-                    return center_yz(g, p, offs[1:])
-                return _exec_statements(kernel, tap_read, scalars,
-                                        plane_shape, dtype)
-
-            def step(t, outs):
-                env = compute_plane(t)
-                return tuple(
-                    lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
-                    for g, out in zip(out_grids, outs))
-
-            outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
-            outs = lax.fori_loop(0, bx, step, outs0)
-            for out, oref in zip(outs, out_refs):
-                oref[...] = out
-            return
-
-        # mem_type == 'registers': rolling loop-carried window per grid.
-        # Invariant: after `advance` at step t, window slot k holds the
-        # plane at region coord t - hg0 + k (tile-x index t - hg0 + k + H).
-        def init_window(g):
-            n = win_len[g]
-            hg0 = gh[g][0]
-            planes = [jnp.zeros(tiles[g].shape[1:], dtype)]
-            for k in range(1, n):
-                planes.append(plane(g, H - hg0 + k - 1))
-            return jnp.stack(planes, axis=0)
-
-        def advance(W, new_plane):
-            if variant == "unroll":
-                return jnp.concatenate([W[1:], new_plane[None]], axis=0)
-            W = jnp.roll(W, -1, axis=0)
-            return W.at[-1].set(new_plane)
-
-        def step(t, carry):
-            Ws, outs = carry
-            # newest slot holds region plane t + hg0 → tile-x index t+hg0+H
-            Ws2 = tuple(advance(W, plane(g, t + gh[g][0] + H))
-                        for g, W in zip(in_grids, Ws))
-
-            def tap_read(g, offs):
-                W = Ws2[in_grids.index(g)]
-                slot = gh[g][0] + offs[0]
-                return center_yz(g, W[slot], offs[1:])
-
-            env = _exec_statements(kernel, tap_read, scalars, plane_shape, dtype)
-            outs = tuple(
-                lax.dynamic_update_slice_in_dim(out, env[g][None], t, axis=0)
-                for g, out in zip(out_grids, outs))
-            return Ws2, outs
-
-        Ws0 = tuple(init_window(g) for g in in_grids)
-        outs0 = tuple(jnp.zeros(B, dtype) for _ in out_grids)
-        _, outs = lax.fori_loop(0, bx, step, (Ws0, outs0))
+        outs = _stream_outputs(kernel, spec, tiles, scalars, variant=variant,
+                               mem_type=mem_type, H=H, lin=lin)
         for out, oref in zip(outs, out_refs):
             oref[...] = out
 
@@ -511,7 +559,7 @@ def lower_pallas(kernel: ir.StencilIR,
             scratch_shapes=scratch_shapes,
             interpret=backend.interpret,
             name=f"stencil_{kernel.name}_{template}",
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=_CompilerParams(
                 dimension_semantics=("arbitrary",) * ndim),
         )
         outs = call(*ops)
@@ -530,3 +578,281 @@ def lower_pallas(kernel: ir.StencilIR,
         return result
 
     return fn
+
+
+# ---------------------------------------------------------------------------
+# fused time-loop path: one-time layout stage + per-step kernel stage
+# ---------------------------------------------------------------------------
+def _valid_mask(B, R, ndim):
+    """Block mask of positions that belong to the true interior (the block
+    region may overhang the interior when R is not a block multiple)."""
+    mask = None
+    for ax in range(ndim):
+        coord = (pl.program_id(ax) * B[ax]
+                 + lax.broadcasted_iota(jnp.int32, B, ax))
+        m = coord < R[ax]
+        mask = m if mask is None else jnp.logical_and(mask, m)
+    return mask
+
+
+def _make_body_fused(kernel, info, spec, *, template: str, mem_type: str):
+    """Persistent-layout step body: one halo'd *window* ref per grid
+    (deduplicated operands), outputs written in padded layout with
+    pass-through of the old value outside the true interior (preserves the
+    grid halo and the padding across fused steps — no repacking)."""
+    B, gh, ndim, R = spec["B"], spec["gh"], spec["ndim"], spec["R"]
+    opnd_index, scal_names, out_grids, dtype = (
+        spec["opnd_index"], spec["scal_names"], spec["out_grids"],
+        spec["dtype"])
+    in_grids = spec["in_grids"]
+    streaming = template in ("shift", "unroll", "semi")
+    lin = H = None
+    if streaming:
+        lin, H = _stream_halo(kernel, spec, template)
+
+    def body(*refs):
+        n_in = len(opnd_index)
+        in_refs = refs[:n_in]
+        scal_refs = refs[n_in:n_in + len(scal_names)]
+        out_refs = refs[n_in + len(scal_names):]
+
+        scalars = {n: r[0, 0] for n, r in zip(scal_names, scal_refs)}
+        loaded: Dict = {}
+
+        def win(g):
+            if g not in loaded:
+                loaded[g] = in_refs[opnd_index[g]][...]
+            return loaded[g]
+
+        if streaming:
+            # tiles sliced straight from the fetched window; zero-extend the
+            # x-halo to the streaming halo H, matching the per-application
+            # tile assembly (extra planes stay zero for the linear scatter)
+            tiles = {}
+            for g in in_grids:
+                w = win(g)
+                if H == gh[g][0]:
+                    tiles[g] = w
+                else:
+                    pad0 = H - gh[g][0]
+                    t = jnp.zeros((B[0] + 2 * H,) + w.shape[1:], dtype)
+                    tiles[g] = t.at[pad0:pad0 + w.shape[0]].set(w)
+            env_vals = _stream_outputs(kernel, spec, tiles, scalars,
+                                       variant=template, mem_type=mem_type,
+                                       H=H, lin=lin)
+            env = dict(zip(out_grids, env_vals))
+        else:
+            def tap_read(g, offs):
+                h = gh[g]
+                idx = tuple(slice(h[ax] + offs[ax], h[ax] + offs[ax] + B[ax])
+                            for ax in range(ndim))
+                return win(g)[idx]
+
+            env = _exec_statements(kernel, tap_read, scalars, B, dtype)
+
+        mask = _valid_mask(B, R, ndim)
+        for g, oref in zip(out_grids, out_refs):
+            # outside the interior keep the old value (win(g) is the bare
+            # center block: fused mode requires center-only taps of outputs)
+            oref[...] = jnp.where(mask, env[g], win(g))
+
+    return body
+
+
+class PallasPlan:
+    """Split Pallas lowering for fused time stepping.
+
+    ``to_padded``  — one-time layout stage: convert each participating grid
+                     to the persistent block-padded layout (ONE ``jnp.pad``
+                     per grid; counted in ``PAD_COUNT``).
+    ``step``       — per-step kernel stage: one ``pallas_call`` that reads
+                     halo'd windows (one deduplicated operand per grid) and
+                     writes each output grid in-place in padded layout
+                     (``input_output_aliases``), passing the old value
+                     through outside the interior so halos survive.
+    ``from_padded``— write padded interiors back into full (grid-halo'd)
+                     arrays at a fusion boundary.
+
+    Grids named in ``swap`` share a common layout halo so their buffers can
+    be rotated between steps without re-laying-out.
+    """
+
+    def __init__(self, kernel: ir.StencilIR,
+                 halos: Dict[str, Tuple[int, ...]],
+                 interior_shape: Tuple[int, ...],
+                 backend,
+                 swap: Optional[Tuple[str, str]] = None):
+        info = analysis.analyze(kernel)
+        ndim = kernel.ndim
+        if ndim not in (2, 3):
+            raise ValueError("pallas backend supports 2D and 3D stencils")
+        template = backend.template
+        R = tuple(interior_shape)
+        B = choose_block(backend.block, template, ndim, R)
+        in_grids = info.input_grids
+        out_grids = info.output_grids
+        opnd_grids = tuple(g for g in kernel.grid_params
+                           if g in set(in_grids) | set(out_grids))
+        gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in opnd_grids}
+        for g in out_grids:
+            if any(gh[g]):
+                raise ValueError(
+                    f"fused time stepping requires center-only taps of the "
+                    f"output grid '{g}' (its padded buffer is written "
+                    "in-place while neighbors still read it)")
+        for g in in_grids:
+            for ax in range(ndim):
+                if gh[g][ax] > B[ax]:
+                    raise ValueError(
+                        f"halo {gh[g][ax]} exceeds block {B[ax]} on axis "
+                        f"{ax}; increase block size")
+        if template == "f4" and (B[-1] % 128 or B[-2] % 8):
+            raise ValueError("f4 template requires lane-aligned blocks "
+                             "(last dim %128, 2nd-last %8)")
+        mem_type = backend.mem_type
+        if mem_type is None:
+            mem_type = "registers" if info.shape in ("star", "point") \
+                else "vmem"
+
+        # layout halo: swap partners trade buffers between steps, so they
+        # must share one padded geometry (the elementwise max of their taps)
+        hw = dict(gh)
+        if swap is not None:
+            a, b = swap
+            if a not in opnd_grids or b not in opnd_grids:
+                raise ValueError(f"swap grids {swap} must appear in kernel")
+            m = tuple(max(gh[a][ax], gh[b][ax]) for ax in range(ndim))
+            hw[a] = hw[b] = m
+        for g in opnd_grids:
+            for ax in range(ndim):
+                if halos[g][ax] < hw[g][ax]:
+                    raise ValueError(
+                        f"grid '{g}' halo {halos[g][ax]} too small for "
+                        f"layout halo {hw[g][ax]} on axis {ax}")
+
+        nb = tuple(-(-R[ax] // B[ax]) for ax in range(ndim))
+        padded_shape = tuple((nb[ax] + 2) * B[ax] for ax in range(ndim))
+        scal_names = [n for n, _ in kernel.scalar_params]
+
+        def _window_map(w):
+            def imap(*gi):
+                return tuple(gi[ax] * B[ax] + B[ax] - w[ax]
+                             for ax in range(ndim))
+            return imap
+
+        in_specs = []
+        for g in opnd_grids:
+            w = gh[g]
+            in_specs.append(pl.BlockSpec(
+                tuple(B[ax] + 2 * w[ax] for ax in range(ndim)),
+                _window_map(w), indexing_mode=pl.Unblocked()))
+        for _ in scal_names:
+            in_specs.append(pl.BlockSpec((1, 1), lambda *gi: (0, 0)))
+        out_specs = [pl.BlockSpec(B, lambda *gi: tuple(g + 1 for g in gi))
+                     for _ in out_grids]
+        aliases = {opnd_grids.index(g): oi
+                   for oi, g in enumerate(out_grids)}
+
+        self.kernel, self.info, self.backend = kernel, info, backend
+        self.halos = {g: tuple(halos[g]) for g in opnd_grids}
+        self.template, self.mem_type = template, mem_type
+        self.ndim, self.R, self.B, self.nb = ndim, R, B, nb
+        self.gh, self.hw, self.swap = gh, hw, swap
+        self.in_grids, self.out_grids = in_grids, out_grids
+        self.opnd_grids, self.scal_names = opnd_grids, scal_names
+        self.padded_shape = padded_shape
+        self._in_specs, self._out_specs = in_specs, out_specs
+        self._aliases = aliases
+        self._calls: Dict = {}
+        # grids whose padded buffers change across steps (need write-back)
+        self.touched = tuple(g for g in opnd_grids
+                             if g in set(out_grids) | set(swap or ()))
+
+    # -- layout stage ------------------------------------------------------
+    def to_padded(self, arrays: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        B, nb, R, ndim = self.B, self.nb, self.R, self.ndim
+        padded = {}
+        for g in self.opnd_grids:
+            arr = arrays[g]
+            ha, w = self.halos[g], self.hw[g]
+            sl = tuple(slice(ha[ax] - w[ax], ha[ax] + R[ax] + w[ax])
+                       for ax in range(ndim))
+            W = arr[sl]
+            pads = []
+            for ax in range(ndim):
+                before = B[ax] - w[ax]
+                total = (nb[ax] + 2) * B[ax]
+                pads.append((before, total - before - W.shape[ax]))
+            padded[g] = jnp.pad(W, pads)
+            PAD_COUNT[g] += 1
+            PAD_COUNT["total"] += 1
+        return padded
+
+    # -- kernel stage ------------------------------------------------------
+    def _call_for(self, dtype):
+        key = jnp.dtype(dtype).name
+        call = self._calls.get(key)
+        if call is None:
+            spec = dict(B=self.B, gh=self.gh, ndim=self.ndim, R=self.R,
+                        opnd_index={g: i for i, g in
+                                    enumerate(self.opnd_grids)},
+                        scal_names=self.scal_names,
+                        out_grids=self.out_grids, in_grids=self.in_grids,
+                        dtype=dtype)
+            body = _make_body_fused(self.kernel, self.info, spec,
+                                    template=self.template,
+                                    mem_type=self.mem_type)
+            call = pl.pallas_call(
+                body,
+                grid=self.nb,
+                in_specs=self._in_specs,
+                out_specs=self._out_specs,
+                out_shape=[jax.ShapeDtypeStruct(self.padded_shape, dtype)
+                           for _ in self.out_grids],
+                input_output_aliases=self._aliases,
+                interpret=self.backend.interpret,
+                name=(f"stencil_{self.kernel.name}_{self.template}"
+                      "_fused_step"),
+                compiler_params=_CompilerParams(
+                    dimension_semantics=("arbitrary",) * self.ndim),
+            )
+            self._calls[key] = call
+        return call
+
+    def step(self, padded: Dict[str, jnp.ndarray],
+             scalars: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """One kernel application entirely in padded layout (jittable)."""
+        dtype = padded[self.out_grids[0]].dtype
+        ops = [padded[g] for g in self.opnd_grids]
+        ops += [jnp.asarray(scalars[n], jnp.float32).reshape(1, 1)
+                for n in self.scal_names]
+        outs = self._call_for(dtype)(*ops)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+        new = dict(padded)
+        for g, O in zip(self.out_grids, outs):
+            new[g] = O
+        return new
+
+    # -- boundary stage ----------------------------------------------------
+    def from_padded(self, padded: Dict[str, jnp.ndarray],
+                    arrays: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Merge padded interiors back into the full (grid-halo'd) arrays."""
+        B, R, ndim = self.B, self.R, self.ndim
+        result = dict(arrays)
+        blk = tuple(slice(B[ax], B[ax] + R[ax]) for ax in range(ndim))
+        for g in self.touched:
+            ha = self.halos[g]
+            idx = tuple(slice(ha[ax], ha[ax] + R[ax]) for ax in range(ndim))
+            result[g] = result[g].at[idx].set(padded[g][blk])
+        return result
+
+
+def plan_pallas(kernel: ir.StencilIR,
+                halos: Dict[str, Tuple[int, ...]],
+                interior_shape: Tuple[int, ...],
+                backend,
+                swap: Optional[Tuple[str, str]] = None) -> PallasPlan:
+    """Build the split (layout / per-step kernel) lowering used by the
+    fused time-loop engine (``repro.core.timeloop``)."""
+    return PallasPlan(kernel, halos, interior_shape, backend, swap=swap)

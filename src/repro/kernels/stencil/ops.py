@@ -44,3 +44,39 @@ def stencil_apply(kernel: "st.Kernel",
                         interpret=interpret)
     fn = codegen.lower_pallas(k_ir, dict(halos), interior, region, backend)
     return jax.jit(fn)(dict(arrays), dict(scalars or {}))
+
+
+def stencil_timeloop(kernel: "st.Kernel",
+                     arrays: Dict[str, jnp.ndarray],
+                     steps: int,
+                     *,
+                     swap: Tuple[str, str],
+                     scalars: Optional[Mapping[str, jnp.ndarray]] = None,
+                     halos: Optional[Mapping[str, Tuple[int, ...]]] = None,
+                     template: str = "gmem",
+                     block: Optional[Tuple[int, ...]] = None,
+                     mem_type: Optional[str] = None,
+                     interpret: bool = True,
+                     fuse_steps: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+    """Fused time stepping on raw halo-padded arrays (the array-level twin
+    of ``st.timeloop``): ``steps`` applications + leapfrog rotation of the
+    ``swap`` pair, executed on the persistent block-padded layout with one
+    halo pad per grid per fusion window (``fuse_steps``, default: fully
+    fused).  Returns the final arrays under the name-rotation convention
+    (the newest field ends up under the *read* grid's name after each
+    swap, exactly like a ``(u.data, v.data) = (v.data, u.data)`` loop).
+    """
+    from repro.core import timeloop as _tl
+
+    k_ir = kernel.ir
+    if halos is None:
+        h = kernel.info.halo
+        halos = {g: h for g in k_ir.grid_params}
+    g0 = k_ir.grid_params[0]
+    interior = tuple(s - 2 * hh for s, hh in zip(arrays[g0].shape, halos[g0]))
+    backend = st.pallas(template=template, block=block, mem_type=mem_type,
+                        interpret=interpret)
+    return _tl.run_timeloop(k_ir, dict(arrays), dict(scalars or {}), steps,
+                            halos=dict(halos), interior_shape=interior,
+                            backend=backend, swap=swap,
+                            fuse_steps=fuse_steps)

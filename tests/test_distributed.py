@@ -101,6 +101,42 @@ else:
 """)
 
 
+def test_timeloop_fused_distributed_matches_per_step():
+    """st.timeloop on the distributed backend (fusion window → overlapped
+    tiling / time skewing, unifying fuse_steps with time_steps) must match
+    the per-step distributed target; oversized windows clamp to k·h ≤
+    local extent instead of failing."""
+    _run_in_subprocess("""
+import jax, numpy as np
+from repro.core import acoustic, dsl as st
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = (48, 32, 24)
+
+def mk():
+    p0, p1, vp2, damp, dt = acoustic.make_fields(shape, pml_width=4)
+    acoustic.inject_source(p1, 0)
+    return p0, p1, vp2, damp, dt
+
+p0, p1, vp2, damp, dt = mk()
+st.launch(backend=st.distributed(grid_axes=("data", "model", None),
+                                 overlap=False), mesh=mesh)(
+    acoustic.acoustic_target)(p0, p1, vp2, damp, dt, 6)
+ref0, ref1 = np.asarray(p0.data), np.asarray(p1.data)
+
+for fuse in (1, 2, 3, 6):   # 6 > max feasible k=3 → clamped, not an error
+    q = mk()
+    st.launch(backend=st.distributed(grid_axes=("data", "model", None)),
+              mesh=mesh, fuse_steps=fuse)(
+        lambda *a: st.timeloop(6, swap=("p0", "p1"))(
+            acoustic.acoustic_iso_kernel)(*a))(*q[:5])
+    err = max(float(np.abs(np.asarray(q[0].data) - ref0).max()),
+              float(np.abs(np.asarray(q[1].data) - ref1).max()))
+    assert err < 1e-6, (fuse, err)
+    print("OK fused-distributed", fuse)
+""")
+
+
 def test_time_skewed_matches_stepwise():
     """Overlapped tiling (time_steps=k, ONE k·h-wide exchange) must equal
     k separately-exchanged steps — including at global boundaries where

@@ -7,7 +7,10 @@ checked to be evaluation-preserving.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed (see "
+                    "requirements-dev.txt); property tests skipped")
+from hypothesis import given, settings, strategies as hst  # noqa: E402
 
 from repro.core import analysis, dsl as st, lowering
 from repro.kernels.stencil import ops, ref

@@ -1,0 +1,223 @@
+"""Fused time-loop engine tests: equivalence with per-step execution on
+the accuracy suite (xla + pallas interpret), the one-pad-per-window layout
+invariant, window-boundary hooks, and the fuse_steps autotuner knobs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune, dsl as st, suite
+from repro.kernels.stencil import codegen, ops
+
+STEPS = 5
+
+
+def _mk_grids(name, seed=0):
+    k = suite.get_kernel(name)
+    shape = (16, 24) if k.info.ndim == 2 else (8, 10, 16)
+    return {g: st.grid(dtype=st.f32, shape=shape,
+                       order=k.info.order).randomize(seed + i)
+            for i, g in enumerate(k.ir.grid_params)}
+
+
+def _per_step_reference(name, steps=STEPS):
+    """Per-step st.map loop with the name-rotation (data-swap) convention."""
+    k = suite.get_kernel(name)
+    grids = _mk_grids(name)
+
+    def tgt(u, v):
+        for _ in range(steps):
+            st.map(e=u.shape)(k)(u, v)
+            (u.data, v.data) = (v.data, u.data)
+
+    st.launch(backend=st.xla())(tgt)(grids["u"], grids["v"])
+    return {n: np.asarray(g.data) for n, g in grids.items()}
+
+
+def _fused(name, backend, fuse, steps=STEPS):
+    k = suite.get_kernel(name)
+    grids = _mk_grids(name)
+    st.launch(backend=backend)(
+        lambda u, v: st.timeloop(steps, swap=suite.swap_pair(name),
+                                 fuse_steps=fuse)(k)(u, v))(
+        grids["u"], grids["v"])
+    return {n: np.asarray(g.data) for n, g in grids.items()}
+
+
+# ---- fused == per-step across the whole accuracy suite (xla) --------------
+@pytest.mark.parametrize("name", suite.KERNEL_NAMES)
+def test_fused_matches_per_step_xla_suite(name):
+    want = _per_step_reference(name)
+    for fuse in (1, 2, STEPS):
+        got = _fused(name, st.xla(), fuse)
+        for g in ("u", "v"):
+            np.testing.assert_allclose(got[g], want[g], atol=1e-6,
+                                       err_msg=f"{name}/xla/fuse={fuse}/{g}")
+
+
+# ---- fused == per-step on pallas(interpret) templates ---------------------
+@pytest.mark.parametrize("name", ("star2d2r", "box2d1r", "star3d2r",
+                                  "box3d1r", "j2d5pt", "j3d27pt"))
+@pytest.mark.parametrize("template", ("gmem", "shift"))
+def test_fused_matches_per_step_pallas(name, template):
+    want = _per_step_reference(name)
+    got = _fused(name, st.pallas(template=template), fuse=STEPS)
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6,
+                                   err_msg=f"{name}/{template}/{g}")
+
+
+@pytest.mark.parametrize("template", ("smem", "f4", "unroll", "semi"))
+def test_fused_all_templates_star2d2r(template):
+    want = _per_step_reference("star2d2r")
+    got = _fused("star2d2r", st.pallas(template=template), fuse=2)
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6,
+                                   err_msg=f"star2d2r/{template}/{g}")
+
+
+# ---- multi-statement kernel with scalars + coefficient grids --------------
+def test_fused_acoustic_matches_per_step():
+    from repro.core import acoustic
+    shape = (12, 12, 16)
+    ref, _ = acoustic.run(shape=shape, iters=6, with_source=False)
+    for backend in (st.xla(), st.pallas(template="gmem")):
+        got, _ = acoustic.run(shape=shape, iters=6, with_source=False,
+                              backend=backend, fuse_steps=6)
+        np.testing.assert_allclose(np.asarray(got.interior),
+                                   np.asarray(ref.interior), atol=1e-6)
+
+
+# ---- layout invariant: ONE halo pad per grid per fusion window ------------
+def test_pallas_one_pad_per_grid_per_window():
+    name = "star2d1r"
+    k = suite.get_kernel(name)
+    codegen.reset_pad_count()
+    # 12 steps in windows of 4 → 3 windows; star kernels pad u and v
+    _fused(name, st.pallas(template="gmem"), fuse=4, steps=12)
+    assert codegen.PAD_COUNT["u"] == 3, dict(codegen.PAD_COUNT)
+    assert codegen.PAD_COUNT["v"] == 3, dict(codegen.PAD_COUNT)
+    assert codegen.PAD_COUNT["total"] == 6, dict(codegen.PAD_COUNT)
+    codegen.reset_pad_count()
+
+
+def test_fused_window_program_has_no_pad_ops():
+    """The compiled fusion-window program itself must contain zero pad ops:
+    the single layout pad per grid happens eagerly at the window boundary,
+    and steps inside the window write in-place in padded layout."""
+    k = suite.get_kernel("star2d1r")
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    interior = (16, 24)
+    plan = codegen.plan_pallas(k.ir, halos, interior,
+                               st.pallas(template="gmem"), swap=("v", "u"))
+    rng = np.random.default_rng(0)
+    arrays = {g: jnp.asarray(rng.standard_normal(
+        tuple(s + 2 * h for s, h in zip(interior, halos[g]))), jnp.float32)
+        for g in k.ir.grid_params}
+    padded = plan.to_padded(arrays)
+
+    def window(p):
+        def body(_, q):
+            out = plan.step(q, {})
+            return dict(out, u=out["v"], v=out["u"])
+        return jax.lax.fori_loop(0, 8, body, p)
+
+    txt = jax.jit(window).lower(padded).as_text()
+    assert txt.count(" pad(") == 0, "fused window repacks the layout"
+
+
+def test_fused_operands_deduplicated():
+    """Each padded grid is passed once per step, not once per neighbor
+    delta: the fused pallas step takes one operand per grid (+ scalars)."""
+    k = suite.get_kernel("box3d2r")        # box: 27 deltas in the legacy path
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    plan = codegen.plan_pallas(k.ir, halos, (8, 10, 16),
+                               st.pallas(template="gmem"), swap=("v", "u"))
+    assert len(plan.opnd_grids) == 2       # u (input) + v (output)
+
+
+# ---- window-boundary hook -------------------------------------------------
+def test_between_hook_runs_at_window_boundaries():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    seen = []
+
+    def hook(t, gs):
+        seen.append(t)
+        assert set(gs) == {"u", "v"}
+
+    st.timeloop(10, swap=("v", "u"), fuse_steps=3, between=hook)(k)(
+        grids["u"], grids["v"])
+    assert seen == [3, 6, 9]               # not after the final window
+
+
+def test_launch_fuse_steps_default_threads_to_timeloop():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    res = st.launch(backend=st.xla(), fuse_steps=2)(
+        lambda u, v: st.timeloop(6, swap=("v", "u"))(k)(u, v))(
+        grids["u"], grids["v"])
+    assert res.value.fuse_steps == 2
+    assert res.value.windows == 3
+
+
+# ---- array-level API ------------------------------------------------------
+def test_stencil_timeloop_array_api():
+    name = "star2d2r"
+    k = suite.get_kernel(name)
+    want = _per_step_reference(name)
+    grids = _mk_grids(name)
+    arrays = {n: g.data for n, g in grids.items()}
+    got = ops.stencil_timeloop(k, arrays, STEPS, swap=("v", "u"),
+                               template="gmem")
+    for g in ("u", "v"):
+        np.testing.assert_allclose(np.asarray(got[g]), want[g], atol=1e-6)
+
+
+# ---- swap validation ------------------------------------------------------
+def test_swap_must_contain_output_grid():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    with pytest.raises(ValueError, match="output grid"):
+        st.timeloop(2, swap=("u", "u"))(k)(grids["u"], grids["v"])
+
+
+# ---- grid.randomize dtype fix ---------------------------------------------
+def test_randomize_preserves_dtype():
+    g = st.grid(dtype=st.bf16, shape=(8, 8), order=1).randomize(3)
+    assert g.data.dtype == jnp.bfloat16
+    assert g.interior.dtype == jnp.bfloat16
+    # halo stays zero
+    assert np.all(np.asarray(g.data, np.float32)[0] == 0)
+
+
+# ---- autotune cache key + fuse_steps search -------------------------------
+def test_autotune_cache_key_includes_space_and_iters():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    autotune.clear_cache()
+    a = autotune.tune(k, grids, iters=1, space=[st.xla()])
+    b = autotune.tune(k, grids, iters=1,
+                      space=[st.pallas(template="gmem")])
+    assert a.backend.kind == "xla"
+    assert b.backend.kind == "pallas"      # not the stale cached xla result
+    assert autotune.tune(k, grids, iters=1, space=[st.xla()]) is a  # memoized
+    autotune.clear_cache()
+    assert autotune.tune(k, grids, iters=1, space=[st.xla()]) is not a
+
+
+def test_autotune_searches_fuse_steps():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    autotune.clear_cache()
+    res = autotune.tune(k, grids, iters=1, space=[st.xla()],
+                        swap=("v", "u"), steps=8, fuse_space=(1, 8))
+    assert len(res.trials) == 2
+    assert res.fuse_steps in (1, 8)
+    assert res.seconds < float("inf")
+    # tuner result is launchable through the fused path
+    g2 = _mk_grids("star2d1r")
+    st.launch(backend=res.backend, fuse_steps=res.fuse_steps)(
+        lambda u, v: st.timeloop(4, swap=("v", "u"))(k)(u, v))(
+        g2["u"], g2["v"])
+    autotune.clear_cache()

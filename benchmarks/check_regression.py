@@ -1,0 +1,75 @@
+"""Benchmark regression guard for CI.
+
+Compares a freshly produced ``BENCH_timeloop.json`` against the committed
+baseline and fails (exit 1) when steps/s on a guarded series drops by more
+than ``--threshold`` (default 20%, overridable via the
+``BENCH_REGRESSION_THRESHOLD`` env var — CI runners are noisy, so the
+guard is deliberately coarse; it exists to catch order-of-magnitude
+schedule regressions, not single-digit jitter).
+
+Guarded series: the fused steps/s of the committed star2d1r and
+acoustic-ISO baselines.  Missing keys on either side are reported but do
+not fail the guard (new benchmarks may add rows).
+
+    python -m benchmarks.check_regression baseline.json fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GUARDED = (
+    ("star2d1r", "fused_steps_per_s"),
+    ("acoustic_iso_3d", "fused_steps_per_s"),
+)
+
+
+def check(baseline: dict, fresh: dict, threshold: float):
+    """Return (failures, notes) comparing guarded steps/s series."""
+    failures, notes = [], []
+    for name, key in GUARDED:
+        b = baseline.get(name, {}).get(key)
+        f = fresh.get(name, {}).get(key)
+        if b is None or f is None:
+            notes.append(f"skip {name}.{key}: missing "
+                         f"(baseline={b!r}, fresh={f!r})")
+            continue
+        ratio = f / b
+        line = f"{name}.{key}: baseline {b:.1f} -> fresh {f:.1f} ({ratio:.2f}x)"
+        if ratio < 1.0 - threshold:
+            failures.append(line)
+        else:
+            notes.append(line)
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline", help="committed BENCH_timeloop.json")
+    ap.add_argument("fresh", help="freshly measured BENCH_timeloop.json")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", "0.20")),
+                    help="max allowed fractional steps/s drop (default 0.20)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+
+    failures, notes = check(baseline, fresh, args.threshold)
+    for line in notes:
+        print(f"  ok: {line}")
+    for line in failures:
+        print(f"REGRESSION (> {args.threshold:.0%} drop): {line}")
+    if failures:
+        return 1
+    print("benchmark regression guard passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,8 +49,16 @@ def main(argv=None):
     from benchmarks import timeloop as bench_timeloop
     tl = bench_timeloop.run(fast=args.fast)
     for name, r in tl.items():
-        print(f"csv,timeloop_{name}_steps_per_s,{r['fused_steps_per_s']:.1f}")
-        print(f"csv,timeloop_{name}_speedup,{r['speedup']:.2f}")
+        if "fused_steps_per_s" in r:
+            print(f"csv,timeloop_{name}_steps_per_s,"
+                  f"{r['fused_steps_per_s']:.1f}")
+            print(f"csv,timeloop_{name}_speedup,{r['speedup']:.2f}")
+        else:   # pallas time_block sweep: nested rows
+            for key, row in sorted(r.items()):
+                print(f"csv,timeloop_{name}_{key}_steps_per_s,"
+                      f"{row['fused_steps_per_s']:.1f}")
+                print(f"csv,timeloop_{name}_{key}_hbm_bytes_per_step,"
+                      f"{row['hbm_bytes_per_step']:.0f}")
 
     _hdr("Productivity (paper Table 11 / §6.3)")
     from benchmarks import productivity

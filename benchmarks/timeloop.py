@@ -8,8 +8,13 @@ For star2d1r and the acoustic-ISO 25-point stencil it runs N time steps
   * fused: ``st.timeloop`` — the whole loop traced once into a single
     ``lax.fori_loop`` program (one window),
 
-and reports steps/s and time-to-solution.  Results are written to
-``BENCH_timeloop.json`` so the perf trajectory is tracked across PRs.
+and reports steps/s and time-to-solution.  The pallas rows (interpret
+mode on CPU) sweep the in-kernel temporal-blocking depth ``time_block``
+and report the plan's modeled ``hbm_bytes_per_step`` next to wall clock,
+so the k× HBM-traffic reduction is visible even where interpret-mode
+timing is noisy.  Results are written to ``BENCH_timeloop.json`` so the
+perf trajectory is tracked across PRs (CI guards steps/s regressions
+against the committed baselines).
 
     PYTHONPATH=src python -m benchmarks.timeloop [--fast]
 """
@@ -23,6 +28,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core import acoustic, dsl as st, suite
+from repro.kernels.stencil import codegen
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_timeloop.json")
@@ -70,6 +76,52 @@ def _bench_star2d1r(steps: int, shape, repeats: int = 3) -> Dict:
     }
 
 
+def _bench_star2d1r_pallas(steps: int, shape, repeats: int = 2,
+                           time_blocks=(1, 2, 4)) -> Dict:
+    """Fused pallas path (interpret on CPU) across temporal depths: wall
+    clock plus the plan's modeled HBM bytes per step — the k× traffic
+    reduction is the column that carries to real TPUs."""
+    k = suite.get_kernel("star2d1r")
+    swap = suite.swap_pair(k.name)
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    rows = {}
+    for tb in time_blocks:
+        backend = st.pallas(template="gmem", time_block=tb)
+        plan = codegen.plan_pallas(k.ir, halos, tuple(shape), backend,
+                                   swap=swap)
+
+        def fused(u, v, iters):
+            return st.timeloop(iters, swap=swap)(k)(u, v)
+
+        run = st.launch(backend=backend)
+        g = suite.make_grids("star2d1r", shape=shape)
+        run(fused)(*g.values(), steps)   # warmup compiles the real window
+        best = float("inf")
+        for _ in range(repeats):
+            g = suite.make_grids("star2d1r", shape=shape)
+            t0 = time.perf_counter()
+            run(fused)(*g.values(), steps)
+            best = min(best, time.perf_counter() - t0)
+        rows[f"time_block_{tb}"] = {
+            "kernel": "star2d1r", "backend": "pallas_interpret",
+            "template": "gmem", "time_block": tb, "shape": list(shape),
+            "steps": steps,
+            "fused_seconds": best,
+            "fused_steps_per_s": steps / best,
+            "hbm_bytes_per_step": plan.hbm_bytes_per_step(),
+            "grid_reads_per_step": plan.grid_reads_per_step,
+            "grid_writes_per_step": plan.grid_writes_per_step,
+        }
+    base = rows.get("time_block_1")
+    if base:
+        for r in rows.values():
+            r["speedup_vs_time_block_1"] = (base["fused_seconds"]
+                                            / r["fused_seconds"])
+            r["hbm_reduction_vs_time_block_1"] = (
+                base["hbm_bytes_per_step"] / r["hbm_bytes_per_step"])
+    return rows
+
+
 def _bench_acoustic(steps: int, shape, repeats: int = 2) -> Dict:
     def time_once(fuse):
         acoustic.run(shape=shape, iters=2, with_source=False,
@@ -101,15 +153,25 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
         "star2d1r": _bench_star2d1r(steps, (128, 128) if fast else (256, 256)),
         "acoustic_iso_3d": _bench_acoustic(
             steps, (24, 24, 24) if fast else (48, 48, 48)),
+        "star2d1r_pallas": _bench_star2d1r_pallas(
+            10 if fast else 24, (64, 64) if fast else (128, 128)),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     if verbose:
         for name, r in results.items():
-            print(f"{name:16s} {r['steps']:4d} steps  "
-                  f"per-step {r['unfused_steps_per_s']:8.1f} steps/s  "
-                  f"fused {r['fused_steps_per_s']:8.1f} steps/s  "
-                  f"speedup {r['speedup']:.2f}x", flush=True)
+            if "unfused_steps_per_s" in r:
+                print(f"{name:16s} {r['steps']:4d} steps  "
+                      f"per-step {r['unfused_steps_per_s']:8.1f} steps/s  "
+                      f"fused {r['fused_steps_per_s']:8.1f} steps/s  "
+                      f"speedup {r['speedup']:.2f}x", flush=True)
+            else:
+                for key, row in sorted(r.items()):
+                    print(f"{name:16s} {key:13s} "
+                          f"{row['fused_steps_per_s']:8.1f} steps/s  "
+                          f"hbm/step {row['hbm_bytes_per_step']:10.0f} B  "
+                          f"({row.get('speedup_vs_time_block_1', 1.0):.2f}x "
+                          "vs k=1)", flush=True)
         print(f"wrote {OUT_PATH}")
     return results
 

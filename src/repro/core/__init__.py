@@ -2,8 +2,11 @@
 
 ``from repro.core import dsl as st`` gives the user-facing DSL (paper
 Table 1); submodules: frontend (parser), ir, analysis, lowering (xla
-backend), timeloop (fused time-stepping engine), distributed (multi-chip
-halo exchange), suite (paper Table 4 kernel suite), regions (PML
-decomposition), autotune.
+backend), timeloop (fused time-stepping engine; ``st.pallas``'s
+``time_block=k`` knob advances k leapfrog steps per kernel invocation
+with expanded k·h halos), distributed (multi-chip halo exchange + pod
+time skewing, composable with in-kernel time_block), suite (paper
+Table 4 kernel suite), regions (PML decomposition), autotune (joint
+template × block × fuse_steps × time_block search).
 """
-from . import analysis, dsl, frontend, ir, lowering, timeloop  # noqa: F401
+from . import analysis, dsl, frontend, ir, lowering, suite, timeloop  # noqa: F401

@@ -9,11 +9,19 @@ time-to-solution, the paper's own metric).
 The search space mirrors Table 6's configuration column: template ×
 block (Dx/Dy/Dz) × mem_type × prefetch.  When a ``swap`` pair is given,
 the tuner measures fused time-loop execution instead of single
-applications and searches the fusion-window size ``fuse_steps`` alongside
-the backend knobs::
+applications and searches the fusion-window size ``fuse_steps`` — and,
+for pallas candidates, the in-kernel temporal-blocking depth
+``time_block`` — alongside the backend knobs::
 
     best = autotune.tune(kernel, grids, swap=("v", "u"), steps=32)
     st.launch(backend=best.backend, fuse_steps=best.fuse_steps)(target)(...)
+
+(``best.backend`` carries the winning ``time_block``; candidates whose
+k·h halo cannot fit any block are measured as inf and never win.)
+
+Candidates are deduplicated on (backend, fuse_steps) before measuring —
+a custom ``space`` overlapping ``fuse_space``/``time_block_space`` pays
+for each distinct configuration once.
 
 Results are cached per (kernel, grid geometry, search space, iters,
 time-loop configuration) so repeated launches pay once; a custom ``space``
@@ -67,19 +75,45 @@ def default_space(ndim: int, interior: Sequence[int]) -> List[st.Backend]:
     return out
 
 
-def _normalize_space(space, ndim, interior, swap, steps, fuse_space):
-    """Expand the search space into (backend, fuse_steps) candidates."""
+def _normalize_space(space, ndim, interior, swap, steps, fuse_space,
+                     time_block_space=(1,)):
+    """Expand the search space into (backend, fuse_steps) candidates.
+
+    With ``swap``, plain backend entries are expanded over ``fuse_space``
+    and — for pallas backends — over ``time_block_space`` (the in-kernel
+    temporal depth rides on the backend itself).  ``(backend, fuse)``
+    tuple entries are taken verbatim.  Duplicates arising from overlap
+    between a custom space and the expansion axes are removed before
+    measuring, so tuning never times the same configuration twice.
+    """
     base = space or default_space(ndim, interior)
+
+    def _norm_fuse(b, f):
+        # mirror TimeloopEngine.effective_fuse: windows ≥ the temporal
+        # depth round down to a multiple of it, so the dedup (and the
+        # reported fuse_steps) sees the window size that actually runs
+        k = int(getattr(b, "time_block", 1) or 1)
+        if k > 1 and f >= k:
+            f = (f // k) * k
+        return f
+
     cands: List[Tuple[st.Backend, int]] = []
     for entry in base:
         if isinstance(entry, tuple):
             b, f = entry
             # without a swap pair only single applications are measured, so
             # a requested window size would be reported but never timed
-            cands.append((b, max(1, int(f)) if swap is not None else 1))
+            cands.append((b, _norm_fuse(b, max(1, int(f)))
+                          if swap is not None else 1))
         elif swap is not None:
-            for f in fuse_space:
-                cands.append((entry, max(1, min(int(f), steps))))
+            backends = [entry]
+            if entry.kind == "pallas":
+                backends = [dataclasses.replace(entry, time_block=int(tb))
+                            for tb in time_block_space]
+            for b in backends:
+                for f in fuse_space:
+                    cands.append((b, _norm_fuse(b, max(1, min(int(f),
+                                                              steps)))))
         else:
             cands.append((entry, 1))
     # dedup while preserving order
@@ -153,13 +187,16 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
          verbose: bool = False,
          swap: Optional[Tuple[str, str]] = None,
          steps: int = 16,
-         fuse_space: Sequence[int] = (1, 4, 16)) -> TuneResult:
+         fuse_space: Sequence[int] = (1, 4, 16),
+         time_block_space: Sequence[int] = (1, 2, 4)) -> TuneResult:
     """Grid-search the backend (and, with ``swap``, the fusion window).
 
     ``space`` entries may be plain backends or ``(backend, fuse_steps)``
     pairs.  Without ``swap`` the tuner measures single kernel applications;
     with ``swap`` it measures ``steps`` fused time-loop steps per candidate
-    and searches ``fuse_space`` window sizes for each backend.
+    and searches ``fuse_space`` window sizes for each backend, plus
+    ``time_block_space`` in-kernel temporal depths for pallas backends
+    (the winner's depth is carried on ``result.backend.time_block``).
     """
     g0 = next(iter(grids.values()))
     key = (kernel.name,
@@ -168,11 +205,13 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
            int(iters), _space_key(space),
            tuple(swap) if swap else None,
            int(steps) if swap else None,
-           tuple(int(f) for f in fuse_space) if swap else None)
+           tuple(int(f) for f in fuse_space) if swap else None,
+           tuple(int(t) for t in time_block_space) if swap else None)
     if key in _CACHE:
         return _CACHE[key]
     cands = _normalize_space(space, kernel.info.ndim, g0.shape, swap,
-                             steps, fuse_space)
+                             steps, fuse_space,
+                             time_block_space if swap else (1,))
     trials = []
     for backend, fuse in cands:
         if swap is None:

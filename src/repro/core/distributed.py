@@ -104,7 +104,10 @@ def lower_distributed(kernel: ir.StencilIR,
     gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in all_grids}
     kernel_halos = {g: gh[g] for g in all_grids}
 
-    if getattr(backend, "time_steps", 1) > 1:
+    _inner = getattr(backend, "inner", None)
+    _k_inner = int(getattr(_inner, "time_block", 1) or 1)
+    if (getattr(backend, "time_steps", 1) > 1
+            or (_k_inner > 1 and getattr(backend, "swap", None) is not None)):
         return _lower_time_skewed(kernel, info, interior_shape, backend,
                                   mesh, grid_axes, local_shape, gh)
 
@@ -250,8 +253,17 @@ def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
     global boundaries the (zero) grid-halo condition is re-imposed on the
     shells between steps so fused results match k separate exchanged
     steps exactly (validated in tests/test_distributed.py).
+
+    A pallas ``inner`` carrying ``time_block=k_inner`` composes with the
+    device-level skewing: ``time_steps`` then counts k_inner-deep temporal
+    groups, so one exchange is k_outer·k_inner·h wide and covers
+    k_outer·k_inner applications (the per-shard sub-steps currently run
+    through the XLA shrinking-region lowering, which has the identical
+    halo/shell geometry as the in-kernel Pallas temporal blocks).
     """
-    k = backend.time_steps
+    inner = getattr(backend, "inner", None)
+    k_inner = int(getattr(inner, "time_block", 1) or 1)
+    k = backend.time_steps * k_inner
     swap = backend.swap
     if swap is None:
         raise ValueError("time_steps > 1 requires swap=(older, newer)")

@@ -175,17 +175,28 @@ class pallas(Backend):
     streaming-dim storage for 2.5D templates ('registers' → unrolled VREG
     window, 'vmem' → VMEM scratch window, None → shape-directed default:
     star→registers, box→vmem, mirroring the paper's auto choice);
-    ``interpret`` runs the kernel body in Python on CPU for validation."""
+    ``interpret`` runs the kernel body in Python on CPU for validation.
+
+    ``time_block=k`` enables in-kernel temporal blocking on the fused
+    time-loop path (``st.timeloop``): each kernel invocation fetches a
+    k·h-deep halo window per grid, advances k leapfrog steps in VMEM, and
+    writes only the final interiors back — HBM sees one read and one write
+    per grid per k steps instead of per step.  Requires k·h ≤ the block
+    extent on every axis (the default block geometry grows to fit) and a
+    ``swap`` pair on the timeloop."""
     kind: str = "pallas"
     template: str = "gmem"
     block: Optional[Tuple[int, ...]] = None
     mem_type: Optional[str] = None
     prefetch: bool = False
     interpret: bool = True  # CPU container: interpret by default
+    time_block: int = 1
 
     def __post_init__(self):
         if self.template not in ("gmem", "smem", "f4", "shift", "unroll", "semi"):
             raise ValueError(f"unknown template {self.template!r}")
+        if int(self.time_block) < 1:
+            raise ValueError("time_block must be >= 1")
 
 
 def tpu(**kw) -> pallas:
@@ -236,6 +247,7 @@ class _Ctx(threading.local):
         self.profile: Dict[str, float] = {}
         self.active = False
         self.fuse_steps: Optional[int] = None
+        self.time_block: Optional[int] = None
 
     def add(self, phase: str, dt: float):
         self.profile[phase] = self.profile.get(phase, 0.0) + dt
@@ -384,6 +396,16 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
     interior = next(iter(grids.values())).shape
     backend = _CTX.backend if _CTX.active else xla()
     mesh = _CTX.mesh if _CTX.active else None
+    tb = _CTX.time_block if _CTX.active else None
+    if tb is not None:
+        # launch-level override of the in-kernel temporal-blocking depth
+        if backend.kind == "pallas":
+            backend = dataclasses.replace(backend, time_block=int(tb))
+        elif (backend.kind == "distributed"
+              and getattr(backend.inner, "kind", None) == "pallas"):
+            backend = dataclasses.replace(
+                backend, inner=dataclasses.replace(backend.inner,
+                                                   time_block=int(tb)))
     fuse = call.fuse_steps
     if fuse is None and _CTX.active:
         fuse = _CTX.fuse_steps
@@ -405,10 +427,10 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
             profile_cb=_CTX.add if _CTX.active else None)
         _CTX.add("codegen", time.perf_counter() - t0)
         k._cache[key] = engine
-    if engine.max_fuse is not None:
-        # distributed overlapped tiling bounds the window (k·h ≤ local
-        # extent); report the window size that actually runs
-        fuse = min(fuse, engine.max_fuse)
+    # distributed overlapped tiling bounds the window (k·h ≤ local extent)
+    # and in-kernel temporal blocking rounds it to a multiple of
+    # time_block; report the window size that actually runs
+    fuse = engine.effective_fuse(fuse)
 
     def between_arrays(t, arrays):
         # surface current state to the user hook via the grid objects
@@ -480,17 +502,20 @@ def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region)
 # --------------------------------------------------------------------------
 class _Launcher:
     def __init__(self, backend: Backend, mesh=None, profile: bool = True,
-                 fuse_steps: Optional[int] = None):
+                 fuse_steps: Optional[int] = None,
+                 time_block: Optional[int] = None):
         self.backend, self.mesh, self.profile = backend, mesh, profile
         self.fuse_steps = fuse_steps
+        self.time_block = time_block
 
     def __call__(self, tgt: Callable):
         def run(*args, **kw) -> LaunchResult:
             prev = (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
-                    _CTX.fuse_steps)
+                    _CTX.fuse_steps, _CTX.time_block)
             _CTX.backend, _CTX.mesh = self.backend, self.mesh
             _CTX.profile, _CTX.active = {}, True
             _CTX.fuse_steps = self.fuse_steps
+            _CTX.time_block = self.time_block
             t0 = time.perf_counter()
             try:
                 value = tgt(*args, **kw)
@@ -498,15 +523,18 @@ class _Launcher:
                 prof = _CTX.profile
                 prof["total"] = time.perf_counter() - t0
                 (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
-                 _CTX.fuse_steps) = prev
+                 _CTX.fuse_steps, _CTX.time_block) = prev
             return LaunchResult(value=value, profile=prof)
         return run
 
 
 def launch(backend: Backend = None, mesh=None, profile: bool = True,
-           fuse_steps: Optional[int] = None) -> _Launcher:
+           fuse_steps: Optional[int] = None,
+           time_block: Optional[int] = None) -> _Launcher:
     """Run a ``@st.target`` under ``backend``.  ``fuse_steps`` sets the
     default fusion-window size for any ``st.timeloop`` inside the target
-    (per-step ``st.map`` loops are unaffected)."""
+    (per-step ``st.map`` loops are unaffected).  ``time_block`` overrides
+    the pallas backend's in-kernel temporal-blocking depth for those
+    timeloops (k leapfrog steps per kernel invocation; see st.pallas)."""
     return _Launcher(backend or xla(), mesh=mesh, profile=profile,
-                     fuse_steps=fuse_steps)
+                     fuse_steps=fuse_steps, time_block=time_block)

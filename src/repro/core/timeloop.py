@@ -12,14 +12,24 @@ that fusion for all three backends:
                  (``lowering.lower_jax_window``).
   pallas       — lowering is split into a one-time layout stage (grids →
                  persistent block-padded layout, ONE ``jnp.pad`` per grid
-                 per fusion window) and a per-step kernel stage executed
-                 inside the fused loop (``codegen.plan_pallas``); outputs
-                 are written in-place in padded layout and the grid halo is
-                 passed through, so no repacking happens between steps.
+                 per fusion window) and a per-invocation kernel stage
+                 executed inside the fused loop (``codegen.plan_pallas``);
+                 outputs are written in-place in padded layout and the grid
+                 halo is passed through, so no repacking happens between
+                 steps.  With ``time_block=k`` on the backend, one kernel
+                 invocation advances k leapfrog steps entirely in VMEM
+                 (expanded k·h halos, in-kernel temporal blocking) — the
+                 fusion window is decomposed into ⌊kw/k⌋ k-step invocations
+                 plus a remainder of single steps, so any ``steps`` value
+                 stays exact while full windows are multiples of k.
+                 Modeled HBM traffic per window is accumulated in
+                 ``codegen.TRAFFIC_COUNT`` alongside ``PAD_COUNT``.
   distributed  — a fusion window maps onto the overlapped-tiling /
                  time-skewed program (one k·h-wide halo exchange covers k
                  kernel applications), unifying ``fuse_steps`` with the
-                 backend's pre-existing ``time_steps`` knob.
+                 backend's pre-existing ``time_steps`` knob.  A pallas
+                 ``inner`` carrying ``time_block=k_inner`` composes: the
+                 exchange width grows to k_outer·k_inner·h.
 
 The host syncs only at fusion-window boundaries; an optional ``between``
 hook runs there (e.g. acoustic source injection).
@@ -99,16 +109,31 @@ class TimeloopEngine:
         self.mesh = mesh
         self._profile_cb = profile_cb
         self._windows: Dict[int, Callable] = {}
-        self._plan = None
+        self._plan = self._plan1 = None
+        self.time_block = 1
         if backend.kind == "pallas":
             from repro.kernels.stencil import codegen as _codegen
             # (plan construction time is charged to "codegen" by the caller)
             self._plan = _codegen.plan_pallas(
                 kernel, self.halos, self.interior, backend, swap=self.swap)
+            self.time_block = self._plan.time_block
+            if self.time_block > 1:
+                # single-step plan for the fusion-window remainder
+                # (kw mod time_block) — shares the padded geometry so the
+                # same layout buffers feed both kernels
+                be1 = dataclasses.replace(backend, time_block=1,
+                                          block=self._plan.B)
+                self._plan1 = _codegen.plan_pallas(
+                    kernel, self.halos, self.interior, be1, swap=self.swap)
+            else:
+                self._plan1 = self._plan
         elif backend.kind not in ("xla", "distributed"):
             raise ValueError(f"timeloop: unsupported backend {backend.kind}")
-        if backend.kind == "distributed" and self.swap is None:
-            raise ValueError("distributed timeloop requires swap=(a, b)")
+        if backend.kind == "distributed":
+            if self.swap is None:
+                raise ValueError("distributed timeloop requires swap=(a, b)")
+            inner = getattr(backend, "inner", None)
+            self.time_block = int(getattr(inner, "time_block", 1) or 1)
         # overlapped tiling bound: a k-step window exchanges k·h-wide halos,
         # which must fit in the local shard extent on every decomposed axis
         self.max_fuse: Optional[int] = None
@@ -143,23 +168,53 @@ class TimeloopEngine:
                 self.kernel, self.halos, self.interior, None, self.swap, kw)
             fn = jax.jit(win, donate_argnums=donate)
         elif self.backend.kind == "pallas":
-            plan, swap = self._plan, self.swap
+            plan, plan1, swap = self._plan, self._plan1, self.swap
+            k = self.time_block
+            m, r = divmod(kw, k)
 
             def win(padded, scalars):
                 from jax import lax
 
-                def body(_, p):
+                def body_k(_, p):
                     out = plan.step(p, scalars)
+                    # a k-step invocation leaves buffer↔name bindings
+                    # untouched; k leapfrog rotations net to k mod 2
+                    return _rotate(out, swap) if (swap and k % 2) else out
+
+                def body_1(_, p):
+                    out = plan1.step(p, scalars)
                     return _rotate(out, swap) if swap else out
-                return lax.fori_loop(0, kw, body, dict(padded))
+
+                p = dict(padded)
+                if m:
+                    p = lax.fori_loop(0, m, body_k, p)
+                if r:
+                    p = lax.fori_loop(0, r, body_1, p)
+                return p
             fn = jax.jit(win, donate_argnums=donate)
         else:  # distributed
             from . import distributed as _dist
             be = self.backend
+            inner = getattr(be, "inner", None)
+            k_i = self.time_block
             if kw > 1:
-                be = dataclasses.replace(be, time_steps=kw, swap=self.swap,
-                                         overlap=False)
+                if k_i > 1 and kw % k_i == 0:
+                    # compose pod-level skewing with in-kernel temporal
+                    # blocking: time_steps counts k_i-deep groups, the
+                    # lowering widens the exchange to (kw/k_i)·k_i·h
+                    be = dataclasses.replace(be, time_steps=kw // k_i,
+                                             swap=self.swap, overlap=False)
+                else:
+                    if k_i > 1:
+                        be = dataclasses.replace(
+                            be, inner=dataclasses.replace(inner,
+                                                          time_block=1))
+                    be = dataclasses.replace(be, time_steps=kw,
+                                             swap=self.swap, overlap=False)
             else:
+                if k_i > 1:
+                    be = dataclasses.replace(
+                        be, inner=dataclasses.replace(inner, time_block=1))
                 be = dataclasses.replace(be, time_steps=1, swap=None)
             fn = _dist.lower_distributed(self.kernel, self.halos,
                                          self.interior, None, be, self.mesh)
@@ -167,17 +222,31 @@ class TimeloopEngine:
         self._windows[kw] = fn
         return fn
 
+    def effective_fuse(self, fuse_steps: int) -> int:
+        """Normalize a requested fusion-window size: clamp to the
+        overlapped-tiling bound, then round DOWN to a multiple of the
+        in-kernel ``time_block`` so every k-step invocation is fully used.
+        A window smaller than k is honored as-is (it runs as single steps)
+        — ``fuse_steps`` is the host-sync / ``between``-hook cadence, which
+        temporal blocking must never stretch; rounding down also keeps the
+        result within the overlapped-tiling clamp."""
+        fuse = int(fuse_steps)
+        if fuse < 1:
+            raise ValueError("fuse_steps must be >= 1")
+        if self.max_fuse is not None:
+            fuse = min(fuse, self.max_fuse)
+        k = self.time_block
+        if k > 1 and fuse >= k:
+            fuse = (fuse // k) * k
+        return fuse
+
     # -- driver ------------------------------------------------------------
     def run(self, arrays: Dict[str, jnp.ndarray],
             scalars: Mapping[str, jnp.ndarray],
             steps: int,
             fuse_steps: Optional[int] = None,
             between: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
-        fuse = int(fuse_steps or steps)
-        if fuse < 1:
-            raise ValueError("fuse_steps must be >= 1")
-        if self.max_fuse is not None:
-            fuse = min(fuse, self.max_fuse)
+        fuse = self.effective_fuse(fuse_steps or steps)
         scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
         arrays = dict(arrays)
         t = 0
@@ -200,6 +269,7 @@ class TimeloopEngine:
             t0 = time.perf_counter()
             padded = plan.to_padded(arrays)         # ONE pad/grid/window
             self._add("layout", time.perf_counter() - t0)
+            plan.count_window(kw)                   # modeled HBM traffic
             padded = self._window(kw)(padded, scal)
             # the device program rotated padded buffers kw times; apply the
             # same parity to the full host arrays so halos travel with

@@ -34,13 +34,18 @@ Two execution modes share the template bodies:
     the unpadded arrays.  One ``jnp.pad`` per grid per application.
   * ``plan_pallas`` → :class:`PallasPlan` — the fused time-loop path.
     Lowering is split into a one-time *layout* stage (``to_padded``: one
-    ``jnp.pad`` per grid per fusion window) and a per-step *kernel* stage
-    (``step``: a single ``pallas_call`` whose outputs are written in-place
-    in padded layout via ``input_output_aliases``; positions outside the
-    true interior pass the old value through, so the grid halo survives
-    across steps with no repacking).  Per-grid operands are deduplicated:
-    each padded grid is passed once and fetched as a halo'd window
-    (``pl.Unblocked`` BlockSpec) instead of once per neighbor delta.
+    ``jnp.pad`` per grid per fusion window) and a per-invocation *kernel*
+    stage (``step``: a single ``pallas_call`` whose outputs are written
+    in-place in padded layout via ``input_output_aliases``; positions
+    outside the true interior pass the old value through, so the grid halo
+    survives across steps with no repacking).  Per-grid operands are
+    deduplicated: each padded grid is passed once and fetched as a halo'd
+    window (``pl.Unblocked`` BlockSpec) instead of once per neighbor
+    delta.  With ``backend.time_block=k`` the kernel stage is *temporally
+    blocked* (``_make_body_temporal``): windows carry k·h-deep expanded
+    halos and one invocation advances k leapfrog steps in VMEM, so HBM
+    sees one read+write per grid per k steps (``TRAFFIC_COUNT`` tracks
+    the modeled traffic).
 
 The expression evaluator is shared with the XLA lowering
 (`repro.core.lowering.eval_expr`), so all backends execute the same IR.
@@ -70,16 +75,31 @@ from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 # must show exactly one per grid per fusion window (tests/test_timeloop.py)
 PAD_COUNT: collections.Counter = collections.Counter()
 
+# modeled HBM traffic of the fused path, accumulated by the time-loop engine
+# per executed window: grid-window reads, grid-block writes, and time steps
+# covered.  With in-kernel temporal blocking (``time_block=k``) one
+# read+write pair covers k steps, so reads/steps drops ~k× vs k=1.
+TRAFFIC_COUNT: collections.Counter = collections.Counter()
+
 
 def reset_pad_count() -> None:
     PAD_COUNT.clear()
+
+
+def reset_traffic_count() -> None:
+    TRAFFIC_COUNT.clear()
 
 
 def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def choose_block(user_block, template: str, ndim: int, region_shape):
+def choose_block(user_block, template: str, ndim: int, region_shape,
+                 min_halo=None):
+    """Pick the BlockSpec tile.  ``min_halo`` (per-axis) forces the block to
+    be at least that wide — temporal blocking fetches a ``k·h``-deep halo
+    per side, and the window offset ``B − k·h`` must stay non-negative, so
+    the block grows with the time depth (halo-growth geometry)."""
     if user_block is not None:
         if len(user_block) != ndim:
             raise ValueError(f"block must have {ndim} dims")
@@ -89,7 +109,10 @@ def choose_block(user_block, template: str, ndim: int, region_shape):
     out = []
     for ax, b in enumerate(base):
         align = 128 if ax == ndim - 1 else 8
-        out.append(min(b, _round_up(region_shape[ax], align)))
+        bb = min(b, _round_up(region_shape[ax], align))
+        if min_halo is not None and min_halo[ax] > bb:
+            bb = _round_up(min_halo[ax], align)
+        out.append(bb)
     return tuple(out)
 
 
@@ -451,6 +474,10 @@ def lower_pallas(kernel: ir.StencilIR,
     if region is None:
         region = tuple((0, s) for s in interior_shape)
     R = tuple(e - b for b, e in region)
+    if int(getattr(backend, "time_block", 1) or 1) > 1:
+        raise ValueError(
+            "time_block > 1 is a fused time-loop feature (st.timeloop / "
+            "plan_pallas); the per-application path advances one step")
     template = backend.template
     B = choose_block(backend.block, template, ndim, R)
 
@@ -583,14 +610,18 @@ def lower_pallas(kernel: ir.StencilIR,
 # ---------------------------------------------------------------------------
 # fused time-loop path: one-time layout stage + per-step kernel stage
 # ---------------------------------------------------------------------------
-def _valid_mask(B, R, ndim):
-    """Block mask of positions that belong to the true interior (the block
-    region may overhang the interior when R is not a block multiple)."""
+def _valid_mask(B, R, ndim, ext=None):
+    """Mask of positions that belong to the true interior, over the block
+    extended by ``ext`` per side (temporal sub-steps compute shrinking
+    shells that reach below coordinate 0 and past R; the block may also
+    overhang the interior when R is not a block multiple)."""
+    ext = ext or (0,) * ndim
+    shape = tuple(B[ax] + 2 * ext[ax] for ax in range(ndim))
     mask = None
     for ax in range(ndim):
-        coord = (pl.program_id(ax) * B[ax]
-                 + lax.broadcasted_iota(jnp.int32, B, ax))
-        m = coord < R[ax]
+        coord = (pl.program_id(ax) * B[ax] - ext[ax]
+                 + lax.broadcasted_iota(jnp.int32, shape, ax))
+        m = jnp.logical_and(coord >= 0, coord < R[ax])
         mask = m if mask is None else jnp.logical_and(mask, m)
     return mask
 
@@ -659,17 +690,121 @@ def _make_body_fused(kernel, info, spec, *, template: str, mem_type: str):
     return body
 
 
+def _make_body_temporal(kernel, info, spec, *, template: str, mem_type: str,
+                        time_block: int, swap):
+    """In-kernel temporal blocking: advance ``time_block`` leapfrog steps
+    per kernel invocation (paper-style time skewing brought inside the
+    Pallas block, cf. ``distributed._lower_time_skewed`` at pod level).
+
+    Each operand grid is fetched once as a window with an expanded halo
+    (``k·h`` for the swap pair, ``(k−1)·h + h_g`` for coefficient grids)
+    and kept as a VMEM-resident *frame*.  Sub-step ``j`` evaluates the
+    template body over the block extended by ``(k−1−j)·h`` per side — the
+    valid region shrinks by ``h`` per step, shells being recomputed
+    redundantly by neighboring blocks — and writes the leapfrog buffers
+    alternately (sub-step 0 → ``swap[0]``'s buffer, 1 → ``swap[1]``'s, …),
+    which is exactly the per-step write+rotate sequence expressed in buffer
+    space.  Outside the true interior every sub-step passes the frame's old
+    value through, so grid-halo cells keep their original values and feed
+    later sub-steps unchanged (per-step boundary semantics).  Only the
+    final ``B`` interior of each swap frame is written back — HBM sees one
+    read and one write per grid per ``k`` steps.
+    """
+    B, gh, ndim, R = spec["B"], spec["gh"], spec["ndim"], spec["R"]
+    opnd_index, scal_names, dtype = (
+        spec["opnd_index"], spec["scal_names"], spec["dtype"])
+    in_grids = spec["in_grids"]
+    wf, hvec = spec["wf"], spec["hvec"]
+    step_out = spec["step_out_grids"]          # (written, other) buffers
+    k = time_block
+    written, other = swap
+    streaming = template in ("shift", "unroll", "semi")
+    lin = H = None
+    if streaming:
+        lin, H = _stream_halo(kernel, spec, template)
+
+    def body(*refs):
+        n_in = len(opnd_index)
+        in_refs = refs[:n_in]
+        scal_refs = refs[n_in:n_in + len(scal_names)]
+        out_refs = refs[n_in + len(scal_names):]
+
+        scalars = {n: r[0, 0] for n, r in zip(scal_names, scal_refs)}
+        frames = {g: in_refs[i][...] for g, i in opnd_index.items()}
+
+        for j in range(k):
+            ext = tuple((k - 1 - j) * hvec[ax] for ax in range(ndim))
+            S = tuple(B[ax] + 2 * ext[ax] for ax in range(ndim))
+            # leapfrog in buffer space: IR names ↔ buffers alternate
+            nm = {written: written, other: other} if j % 2 == 0 \
+                else {written: other, other: written}
+
+            if streaming:
+                tiles = {}
+                for g in in_grids:
+                    buf = nm.get(g, g)
+                    w, h = wf[buf], gh[g]
+                    tile = frames[buf][tuple(
+                        slice(w[ax] - ext[ax] - h[ax],
+                              w[ax] + B[ax] + ext[ax] + h[ax])
+                        for ax in range(ndim))]
+                    if H > h[0]:
+                        # zero-extend the x-halo to the streaming halo H,
+                        # matching the single-step fused body
+                        pad0 = H - h[0]
+                        t = jnp.zeros((S[0] + 2 * H,) + tile.shape[1:], dtype)
+                        tile = t.at[pad0:pad0 + tile.shape[0]].set(tile)
+                    tiles[g] = tile
+                env_vals = _stream_outputs(kernel, dict(spec, B=S), tiles,
+                                           scalars, variant=template,
+                                           mem_type=mem_type, H=H, lin=lin)
+                val = env_vals[0]
+            else:
+                def tap_read(g, offs, ext=ext, S=S, nm=nm):
+                    buf = nm.get(g, g)
+                    w = wf[buf]
+                    idx = tuple(
+                        slice(w[ax] - ext[ax] + offs[ax],
+                              w[ax] - ext[ax] + offs[ax] + S[ax])
+                        for ax in range(ndim))
+                    return frames[buf][idx]
+
+                env = _exec_statements(kernel, tap_read, scalars, S, dtype)
+                val = env[written]
+
+            tgt = nm[written]
+            w = wf[tgt]
+            region = tuple(slice(w[ax] - ext[ax], w[ax] + B[ax] + ext[ax])
+                           for ax in range(ndim))
+            # outside the true interior the buffer keeps its original
+            # (grid-halo) value — re-imposed every sub-step so shells never
+            # leak boundary garbage into later sub-steps
+            mask = _valid_mask(B, R, ndim, ext)
+            frames[tgt] = frames[tgt].at[region].set(
+                jnp.where(mask, val, frames[tgt][region]))
+
+        for g, oref in zip(step_out, out_refs):
+            w = wf[g]
+            oref[...] = frames[g][tuple(slice(w[ax], w[ax] + B[ax])
+                                        for ax in range(ndim))]
+
+    return body
+
+
 class PallasPlan:
     """Split Pallas lowering for fused time stepping.
 
     ``to_padded``  — one-time layout stage: convert each participating grid
                      to the persistent block-padded layout (ONE ``jnp.pad``
                      per grid; counted in ``PAD_COUNT``).
-    ``step``       — per-step kernel stage: one ``pallas_call`` that reads
-                     halo'd windows (one deduplicated operand per grid) and
+    ``step``       — kernel stage: one ``pallas_call`` that reads halo'd
+                     windows (one deduplicated operand per grid) and
                      writes each output grid in-place in padded layout
                      (``input_output_aliases``), passing the old value
-                     through outside the interior so halos survive.
+                     through outside the interior so halos survive.  With
+                     ``backend.time_block=k`` one call advances k leapfrog
+                     steps on k·h-expanded windows and writes *both* swap
+                     buffers back (see ``_make_body_temporal``).
     ``from_padded``— write padded interiors back into full (grid-halo'd)
                      arrays at a fusion boundary.
 
@@ -688,9 +823,24 @@ class PallasPlan:
             raise ValueError("pallas backend supports 2D and 3D stencils")
         template = backend.template
         R = tuple(interior_shape)
-        B = choose_block(backend.block, template, ndim, R)
+        k = int(getattr(backend, "time_block", 1) or 1)
+        if k < 1:
+            raise ValueError("time_block must be >= 1")
+        hvec = tuple(info.halo) if info.halo else (0,) * ndim
         in_grids = info.input_grids
         out_grids = info.output_grids
+        if k > 1:
+            if swap is None:
+                raise ValueError(
+                    "time_block > 1 requires a swap pair: the in-kernel "
+                    "sub-steps are the leapfrog write+rotate sequence")
+            if len(out_grids) != 1 or out_grids[0] != swap[0]:
+                raise ValueError(
+                    "time_block > 1 supports single-output kernels writing "
+                    f"swap[0] (outputs: {out_grids}, swap: {swap})")
+        B = choose_block(backend.block, template, ndim, R,
+                         min_halo=tuple(k * h for h in hvec) if k > 1
+                         else None)
         opnd_grids = tuple(g for g in kernel.grid_params
                            if g in set(in_grids) | set(out_grids))
         gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in opnd_grids}
@@ -706,6 +856,24 @@ class PallasPlan:
                     raise ValueError(
                         f"halo {gh[g][ax]} exceeds block {B[ax]} on axis "
                         f"{ax}; increase block size")
+        # expanded window (frame) halo per operand: the swap pair trades
+        # buffers between sub-steps so both carry the full k·h; coefficient
+        # grids are only read while the valid region is ≥ (k−1−j)·h wide
+        if k > 1:
+            wf = {g: tuple(k * hvec[ax] for ax in range(ndim))
+                  if g in swap
+                  else tuple((k - 1) * hvec[ax] + gh[g][ax]
+                             for ax in range(ndim))
+                  for g in opnd_grids}
+        else:
+            wf = dict(gh)
+        for g in opnd_grids:
+            for ax in range(ndim):
+                if wf[g][ax] > B[ax]:
+                    raise ValueError(
+                        f"time_block={k}: expanded halo {wf[g][ax]} exceeds "
+                        f"block {B[ax]} on axis {ax} (need k·h <= block "
+                        "extent; reduce time_block or increase block)")
         if template == "f4" and (B[-1] % 128 or B[-2] % 8):
             raise ValueError("f4 template requires lane-aligned blocks "
                              "(last dim %128, 2nd-last %8)")
@@ -740,25 +908,31 @@ class PallasPlan:
                              for ax in range(ndim))
             return imap
 
+        # per-invocation outputs: with time_block > 1 both swap buffers are
+        # advanced in-kernel, so both are written back (aliased in-place)
+        step_out = tuple(out_grids) if k == 1 else tuple(swap)
+
         in_specs = []
         for g in opnd_grids:
-            w = gh[g]
+            w = wf[g]
             in_specs.append(pl.BlockSpec(
                 tuple(B[ax] + 2 * w[ax] for ax in range(ndim)),
                 _window_map(w), indexing_mode=pl.Unblocked()))
         for _ in scal_names:
             in_specs.append(pl.BlockSpec((1, 1), lambda *gi: (0, 0)))
         out_specs = [pl.BlockSpec(B, lambda *gi: tuple(g + 1 for g in gi))
-                     for _ in out_grids]
+                     for _ in step_out]
         aliases = {opnd_grids.index(g): oi
-                   for oi, g in enumerate(out_grids)}
+                   for oi, g in enumerate(step_out)}
 
         self.kernel, self.info, self.backend = kernel, info, backend
         self.halos = {g: tuple(halos[g]) for g in opnd_grids}
         self.template, self.mem_type = template, mem_type
         self.ndim, self.R, self.B, self.nb = ndim, R, B, nb
         self.gh, self.hw, self.swap = gh, hw, swap
+        self.time_block, self.hvec, self.wf = k, hvec, wf
         self.in_grids, self.out_grids = in_grids, out_grids
+        self.step_out_grids = step_out
         self.opnd_grids, self.scal_names = opnd_grids, scal_names
         self.padded_shape = padded_shape
         self._in_specs, self._out_specs = in_specs, out_specs
@@ -767,6 +941,41 @@ class PallasPlan:
         # grids whose padded buffers change across steps (need write-back)
         self.touched = tuple(g for g in opnd_grids
                              if g in set(out_grids) | set(swap or ()))
+
+    # -- traffic model -----------------------------------------------------
+    @property
+    def grid_reads_per_step(self) -> float:
+        """Grid-window HBM fetches per time step (each invocation reads one
+        window per operand grid and covers ``time_block`` steps)."""
+        return len(self.opnd_grids) / self.time_block
+
+    @property
+    def grid_writes_per_step(self) -> float:
+        """Grid-block HBM writes per time step."""
+        return len(self.step_out_grids) / self.time_block
+
+    def hbm_bytes_per_step(self, itemsize: int = 4) -> float:
+        """Modeled HBM bytes moved per time step by the kernel stage: every
+        block fetches one expanded-halo window per operand grid and writes
+        one ``B`` block per output, amortized over ``time_block`` steps."""
+        nblocks = math.prod(self.nb)
+        read = sum(math.prod(self.B[ax] + 2 * self.wf[g][ax]
+                             for ax in range(self.ndim))
+                   for g in self.opnd_grids)
+        write = len(self.step_out_grids) * math.prod(self.B)
+        return nblocks * (read + write) * itemsize / self.time_block
+
+    def count_window(self, steps: int) -> None:
+        """Accumulate modeled traffic for a fused window of ``steps`` time
+        steps into ``TRAFFIC_COUNT`` (windows of ``time_block`` plus a
+        remainder of single steps, mirroring the engine's decomposition)."""
+        k = self.time_block
+        m, r = divmod(int(steps), k)
+        invocations = m + r
+        TRAFFIC_COUNT["grid_reads"] += invocations * len(self.opnd_grids)
+        TRAFFIC_COUNT["grid_writes"] += (m * len(self.step_out_grids)
+                                         + r * len(self.out_grids))
+        TRAFFIC_COUNT["steps"] += int(steps)
 
     # -- layout stage ------------------------------------------------------
     def to_padded(self, arrays: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
@@ -798,21 +1007,30 @@ class PallasPlan:
                                     enumerate(self.opnd_grids)},
                         scal_names=self.scal_names,
                         out_grids=self.out_grids, in_grids=self.in_grids,
+                        wf=self.wf, hvec=self.hvec,
+                        step_out_grids=self.step_out_grids,
                         dtype=dtype)
-            body = _make_body_fused(self.kernel, self.info, spec,
-                                    template=self.template,
-                                    mem_type=self.mem_type)
+            if self.time_block > 1:
+                body = _make_body_temporal(self.kernel, self.info, spec,
+                                           template=self.template,
+                                           mem_type=self.mem_type,
+                                           time_block=self.time_block,
+                                           swap=self.swap)
+            else:
+                body = _make_body_fused(self.kernel, self.info, spec,
+                                        template=self.template,
+                                        mem_type=self.mem_type)
             call = pl.pallas_call(
                 body,
                 grid=self.nb,
                 in_specs=self._in_specs,
                 out_specs=self._out_specs,
                 out_shape=[jax.ShapeDtypeStruct(self.padded_shape, dtype)
-                           for _ in self.out_grids],
+                           for _ in self.step_out_grids],
                 input_output_aliases=self._aliases,
                 interpret=self.backend.interpret,
                 name=(f"stencil_{self.kernel.name}_{self.template}"
-                      "_fused_step"),
+                      f"_fused_step_k{self.time_block}"),
                 compiler_params=_CompilerParams(
                     dimension_semantics=("arbitrary",) * self.ndim),
             )
@@ -821,7 +1039,11 @@ class PallasPlan:
 
     def step(self, padded: Dict[str, jnp.ndarray],
              scalars: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
-        """One kernel application entirely in padded layout (jittable)."""
+        """One kernel invocation entirely in padded layout (jittable):
+        one time step when ``time_block`` is 1, else ``time_block`` leapfrog
+        steps with both swap buffers advanced in place.  Buffer↔name
+        bindings are untouched; the caller applies the leapfrog rotation
+        parity (``time_block`` rotations) to the names."""
         dtype = padded[self.out_grids[0]].dtype
         ops = [padded[g] for g in self.opnd_grids]
         ops += [jnp.asarray(scalars[n], jnp.float32).reshape(1, 1)
@@ -830,7 +1052,7 @@ class PallasPlan:
         if not isinstance(outs, (list, tuple)):
             outs = [outs]
         new = dict(padded)
-        for g, O in zip(self.out_grids, outs):
+        for g, O in zip(self.step_out_grids, outs):
             new[g] = O
         return new
 

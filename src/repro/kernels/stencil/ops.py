@@ -57,14 +57,17 @@ def stencil_timeloop(kernel: "st.Kernel",
                      block: Optional[Tuple[int, ...]] = None,
                      mem_type: Optional[str] = None,
                      interpret: bool = True,
-                     fuse_steps: Optional[int] = None) -> Dict[str, jnp.ndarray]:
+                     fuse_steps: Optional[int] = None,
+                     time_block: int = 1) -> Dict[str, jnp.ndarray]:
     """Fused time stepping on raw halo-padded arrays (the array-level twin
     of ``st.timeloop``): ``steps`` applications + leapfrog rotation of the
     ``swap`` pair, executed on the persistent block-padded layout with one
     halo pad per grid per fusion window (``fuse_steps``, default: fully
-    fused).  Returns the final arrays under the name-rotation convention
-    (the newest field ends up under the *read* grid's name after each
-    swap, exactly like a ``(u.data, v.data) = (v.data, u.data)`` loop).
+    fused).  ``time_block=k`` advances k steps per kernel invocation with
+    expanded k·h halos (in-kernel temporal blocking).  Returns the final
+    arrays under the name-rotation convention (the newest field ends up
+    under the *read* grid's name after each swap, exactly like a
+    ``(u.data, v.data) = (v.data, u.data)`` loop).
     """
     from repro.core import timeloop as _tl
 
@@ -75,7 +78,7 @@ def stencil_timeloop(kernel: "st.Kernel",
     g0 = k_ir.grid_params[0]
     interior = tuple(s - 2 * hh for s, hh in zip(arrays[g0].shape, halos[g0]))
     backend = st.pallas(template=template, block=block, mem_type=mem_type,
-                        interpret=interpret)
+                        interpret=interpret, time_block=time_block)
     return _tl.run_timeloop(k_ir, dict(arrays), dict(scalars or {}), steps,
                             halos=dict(halos), interior_shape=interior,
                             backend=backend, swap=swap,

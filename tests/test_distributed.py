@@ -175,3 +175,68 @@ for k_steps in (2, 3):
         assert err < 1e-6, (k_steps, g, err)
     print("OK time-skew", k_steps)
 """)
+
+
+def test_time_skew_composes_with_inner_time_block():
+    """Device-level skewing × in-kernel temporal blocking: a pallas inner
+    carrying time_block=k_inner widens the exchange to
+    time_steps·k_inner·h, and the fused result still equals separately
+    exchanged steps.  Also reachable through st.timeloop, whose window
+    maps onto (kw / k_inner) skewing groups."""
+    _run_in_subprocess("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import acoustic, dsl as st
+from repro.core import distributed as dist
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = (48, 32, 24)  # local (12,16): k_total*h <= 12 for k_total=3, h=4
+k_ir = acoustic.acoustic_iso_kernel.ir
+halos = {g: acoustic.acoustic_iso_kernel.info.halo for g in k_ir.grid_params}
+
+be1 = st.distributed(grid_axes=("data", "model", None), overlap=False)
+
+for t_steps, k_inner in ((1, 2), (1, 3), (3, 1)):
+    k_total = t_steps * k_inner
+    p0, p1, vp2, damp, dt = acoustic.make_fields(shape, pml_width=4)
+    acoustic.inject_source(p1, 0)
+    arrays = {"p0": p0.data, "p1": p1.data, "vp2": vp2.data,
+              "damp": damp.data}
+    scal = {"dt": dt}
+
+    be = st.distributed(grid_axes=("data", "model", None),
+                        time_steps=t_steps, swap=("p0", "p1"),
+                        inner=st.pallas(time_block=k_inner))
+    fused = dist.lower_distributed(k_ir, halos, shape, None, be, mesh)
+    got = fused(dict(arrays), scal)
+
+    step = dist.lower_distributed(k_ir, halos, shape, None, be1, mesh)
+    ref = dict(arrays)
+    for _ in range(k_total):
+        out = step(ref, scal)
+        ref = dict(out, p0=ref["p1"], p1=out["p0"])
+
+    for g in ("p0", "p1"):
+        err = float(jnp.abs(got[g] - ref[g]).max())
+        assert err < 1e-6, (t_steps, k_inner, g, err)
+    print("OK compose", t_steps, "x", k_inner)
+
+# through the engine: fuse window -> (kw / k_inner) skewing groups
+p0, p1, vp2, damp, dt = acoustic.make_fields(shape, pml_width=4)
+acoustic.inject_source(p1, 0)
+st.launch(backend=st.distributed(grid_axes=("data", "model", None),
+                                 overlap=False), mesh=mesh)(
+    acoustic.acoustic_target)(p0, p1, vp2, damp, dt, 6)
+ref0, ref1 = np.asarray(p0.data), np.asarray(p1.data)
+
+q = acoustic.make_fields(shape, pml_width=4)
+acoustic.inject_source(q[1], 0)
+st.launch(backend=st.distributed(grid_axes=("data", "model", None),
+                                 inner=st.pallas(time_block=2)),
+          mesh=mesh, fuse_steps=2)(
+    lambda *a: st.timeloop(6, swap=("p0", "p1"))(
+        acoustic.acoustic_iso_kernel)(*a))(*q[:5])
+err = max(float(np.abs(np.asarray(q[0].data) - ref0).max()),
+          float(np.abs(np.asarray(q[1].data) - ref1).max()))
+assert err < 1e-6, err
+print("OK engine-compose")
+""")

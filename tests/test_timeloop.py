@@ -191,6 +191,233 @@ def test_randomize_preserves_dtype():
     assert np.all(np.asarray(g.data, np.float32)[0] == 0)
 
 
+# ---- in-kernel temporal blocking (time_block=k) ---------------------------
+# shape chosen indivisible by every default block axis (8 and 128): blocks
+# overhang the interior on both axes, exercising the valid-region masks
+TB_SHAPE = (13, 21)
+
+
+def _mk_grids_shape(name, shape, seed=0):
+    k = suite.get_kernel(name)
+    return {g: st.grid(dtype=st.f32, shape=shape,
+                       order=k.info.order).randomize(seed + i)
+            for i, g in enumerate(k.ir.grid_params)}
+
+
+def _per_step_reference_shape(name, shape, steps=STEPS):
+    k = suite.get_kernel(name)
+    grids = _mk_grids_shape(name, shape)
+
+    def tgt(u, v):
+        for _ in range(steps):
+            st.map(e=u.shape)(k)(u, v)
+            (u.data, v.data) = (v.data, u.data)
+
+    st.launch(backend=st.xla())(tgt)(grids["u"], grids["v"])
+    return {n: np.asarray(g.data) for n, g in grids.items()}
+
+
+@pytest.mark.parametrize("template", ("gmem", "smem", "f4", "shift",
+                                      "unroll", "semi"))
+@pytest.mark.parametrize("time_block", (1, 2, 4))
+def test_time_block_matches_per_step_all_templates(template, time_block):
+    """k steps per kernel invocation == k per-step applications, on a shape
+    not divisible by the block, for every template; the outermost k·h cells
+    (where the shrinking shells meet the grid halo) are checked explicitly."""
+    name = "star2d2r"                      # h=2 → k·h=8 fits the 8-row block
+    steps = 5                              # not a multiple of k: remainder
+    want = _per_step_reference_shape(name, TB_SHAPE, steps)
+    k = suite.get_kernel(name)
+    grids = _mk_grids_shape(name, TB_SHAPE)
+    st.launch(backend=st.pallas(template=template, time_block=time_block))(
+        lambda u, v: st.timeloop(steps, swap=("v", "u"))(k)(u, v))(
+        grids["u"], grids["v"])
+    got = {n: np.asarray(g.data) for n, g in grids.items()}
+    kh = time_block * k.info.order
+    for g in ("u", "v"):
+        np.testing.assert_allclose(
+            got[g], want[g], atol=1e-6,
+            err_msg=f"{name}/{template}/k={time_block}/{g}")
+        # explicit boundary ring: outermost k·h interior cells on each side
+        o = k.info.order
+        for ax in range(2):
+            for sl in (slice(o, o + kh), slice(-o - kh, -o or None)):
+                idx = tuple(sl if a == ax else slice(None) for a in range(2))
+                np.testing.assert_allclose(
+                    got[g][idx], want[g][idx], atol=1e-6,
+                    err_msg=f"{name}/{template}/k={time_block}/{g}/"
+                            f"boundary ax{ax}")
+
+
+@pytest.mark.parametrize("name", ("star2d2r", "box2d1r", "star3d2r",
+                                  "box3d1r", "j2d5pt", "j3d27pt"))
+def test_time_block4_matches_per_step_suite(name):
+    """Acceptance: time_block=4 matches the per-step reference across the
+    stencil suite (2D/3D, star/box/Jacobi)."""
+    want = _per_step_reference(name)
+    got = _fused(name, st.pallas(template="gmem", time_block=4), fuse=4)
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6,
+                                   err_msg=f"{name}/time_block=4/{g}")
+
+
+def test_time_block_acoustic_matches_per_step():
+    """Multi-grid kernel (coefficient fields + scalar) through the temporal
+    path."""
+    from repro.core import acoustic
+    shape = (12, 12, 16)
+    ref, _ = acoustic.run(shape=shape, iters=6, with_source=False)
+    got, _ = acoustic.run(shape=shape, iters=6, with_source=False,
+                          backend=st.pallas(template="gmem", time_block=2),
+                          fuse_steps=6)
+    np.testing.assert_allclose(np.asarray(got.interior),
+                               np.asarray(ref.interior), atol=1e-6)
+
+
+def test_time_block_reduces_counted_traffic():
+    """Acceptance: counted grid reads/writes per step drop ≥2× at k=4."""
+    name = "star2d1r"
+
+    def ratio(tb):
+        codegen.reset_traffic_count()
+        _fused(name, st.pallas(template="gmem", time_block=tb),
+               fuse=8, steps=8)
+        t = dict(codegen.TRAFFIC_COUNT)
+        return t["grid_reads"] / t["steps"], t["grid_writes"] / t["steps"]
+
+    r1, w1 = ratio(1)
+    r4, w4 = ratio(4)
+    codegen.reset_traffic_count()
+    assert r1 / r4 >= 2, (r1, r4)
+    assert w1 / w4 >= 2, (w1, w4)
+    # the plan's static model agrees
+    k = suite.get_kernel(name)
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    p1 = codegen.plan_pallas(k.ir, halos, (16, 24),
+                             st.pallas(template="gmem"), swap=("v", "u"))
+    p4 = codegen.plan_pallas(k.ir, halos, (16, 24),
+                             st.pallas(template="gmem", time_block=4),
+                             swap=("v", "u"))
+    assert p1.grid_reads_per_step / p4.grid_reads_per_step >= 2
+    assert p1.hbm_bytes_per_step() > p4.hbm_bytes_per_step()
+
+
+def test_time_block_one_pad_per_grid_per_window():
+    """Temporal blocking keeps the one-pad-per-window layout invariant."""
+    codegen.reset_pad_count()
+    _fused("star2d1r", st.pallas(template="gmem", time_block=2),
+           fuse=4, steps=12)
+    assert codegen.PAD_COUNT["u"] == 3, dict(codegen.PAD_COUNT)
+    assert codegen.PAD_COUNT["v"] == 3, dict(codegen.PAD_COUNT)
+    codegen.reset_pad_count()
+
+
+def test_time_block_halo_growth_block_geometry():
+    """Default block geometry grows so the k·h expanded halo fits."""
+    k = suite.get_kernel("star2d4r")       # h=4; k=4 → k·h=16 > default 8
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    plan = codegen.plan_pallas(k.ir, halos, (32, 32),
+                               st.pallas(template="gmem", time_block=4),
+                               swap=("v", "u"))
+    assert plan.B[0] >= 16
+    assert plan.wf["u"] == (16, 16)
+
+
+def test_time_block_validation():
+    k = suite.get_kernel("star2d2r")
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    # user-pinned block too small for k·h
+    with pytest.raises(ValueError, match="k·h <= block"):
+        codegen.plan_pallas(k.ir, halos, (16, 24),
+                            st.pallas(template="gmem", time_block=8,
+                                      block=(8, 128)), swap=("v", "u"))
+    # temporal blocking needs the leapfrog swap pair
+    with pytest.raises(ValueError, match="swap"):
+        codegen.plan_pallas(k.ir, halos, (16, 24),
+                            st.pallas(template="gmem", time_block=2))
+    # the per-application path advances one step
+    grids = _mk_grids("star2d2r")
+    with pytest.raises(ValueError, match="fused time-loop"):
+        st.launch(backend=st.pallas(template="gmem", time_block=2))(
+            lambda u, v: st.map(e=u.shape)(k)(u, v))(grids["u"], grids["v"])
+    with pytest.raises(ValueError):
+        st.pallas(time_block=0)
+
+
+def test_launch_time_block_override_and_window_rounding():
+    """st.launch(time_block=k) overrides the backend knob; the reported
+    fusion window is rounded to a multiple of k."""
+    name = "star2d1r"
+    k = suite.get_kernel(name)
+    want = _per_step_reference(name, steps=10)
+    grids = _mk_grids(name)
+    res = st.launch(backend=st.pallas(template="gmem"), time_block=2)(
+        lambda u, v: st.timeloop(10, swap=("v", "u"), fuse_steps=3)(k)(
+            u, v))(grids["u"], grids["v"])
+    assert res.value.fuse_steps == 2       # 3 rounded down to a multiple
+    assert res.value.windows == 5
+    got = {n: np.asarray(g.data) for n, g in grids.items()}
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6)
+
+
+def test_time_block_never_stretches_between_cadence():
+    """fuse_steps below the temporal depth is honored (runs as single
+    steps): the between hook keeps its exact per-window cadence."""
+    name = "star2d1r"
+    k = suite.get_kernel(name)
+    want = _per_step_reference(name, steps=4)
+    grids = _mk_grids(name)
+    seen = []
+    res = st.launch(backend=st.pallas(template="gmem", time_block=4))(
+        lambda u, v: st.timeloop(4, swap=("v", "u"), fuse_steps=1,
+                                 between=lambda t, gs: seen.append(t))(k)(
+            u, v))(grids["u"], grids["v"])
+    assert res.value.fuse_steps == 1
+    assert seen == [1, 2, 3]
+    got = {n: np.asarray(g.data) for n, g in grids.items()}
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6)
+
+
+def test_autotune_searches_time_block():
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    autotune.clear_cache()
+    res = autotune.tune(k, grids, iters=1,
+                        space=[st.pallas(template="gmem")],
+                        swap=("v", "u"), steps=8, fuse_space=(8,),
+                        time_block_space=(1, 2))
+    assert len(res.trials) == 2
+    tbs = {getattr(b, "time_block", 1) for b, _, _ in res.trials}
+    assert tbs == {1, 2}
+    assert res.seconds < float("inf")
+    # winner is launchable with its time_block riding on the backend
+    g2 = _mk_grids("star2d1r")
+    st.launch(backend=res.backend, fuse_steps=res.fuse_steps)(
+        lambda u, v: st.timeloop(4, swap=("v", "u"))(k)(u, v))(
+        g2["u"], g2["v"])
+    autotune.clear_cache()
+
+
+def test_autotune_dedups_overlapping_space():
+    """A custom space overlapping the fuse/time_block expansion must not
+    measure the same (backend, fuse_steps) twice."""
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+    autotune.clear_cache()
+    res = autotune.tune(
+        k, grids, iters=1,
+        space=[st.pallas(template="gmem"),
+               (st.pallas(template="gmem", time_block=2), 4)],
+        swap=("v", "u"), steps=8, fuse_space=(4,),
+        time_block_space=(1, 2))
+    # expansion: (tb=1, 4), (tb=2, 4); the explicit pair duplicates the
+    # latter → 2 unique candidates, not 3
+    assert len(res.trials) == 2, [(b, f) for b, f, _ in res.trials]
+    autotune.clear_cache()
+
+
 # ---- autotune cache key + fuse_steps search -------------------------------
 def test_autotune_cache_key_includes_space_and_iters():
     k = suite.get_kernel("star2d1r")

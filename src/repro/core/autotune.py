@@ -38,6 +38,7 @@ import jax
 import numpy as np
 
 from . import dsl as st
+from . import timeloop as _tl
 
 _CACHE: Dict = {}
 
@@ -88,14 +89,13 @@ def _normalize_space(space, ndim, interior, swap, steps, fuse_space,
     """
     base = space or default_space(ndim, interior)
 
-    def _norm_fuse(b, f):
-        # mirror TimeloopEngine.effective_fuse: windows ≥ the temporal
-        # depth round down to a multiple of it, so the dedup (and the
-        # reported fuse_steps) sees the window size that actually runs
-        k = int(getattr(b, "time_block", 1) or 1)
-        if k > 1 and f >= k:
-            f = (f // k) * k
-        return f
+    def _norm_fuse(f):
+        # the engine's shared window normalization, so the dedup (and the
+        # reported fuse_steps) sees the window size that actually runs —
+        # e.g. requests ≥ steps collapse to one whole-loop window.  (The
+        # overlapped-tiling clamp is mesh-dependent and applied by the
+        # engine at measurement time.)
+        return _tl.normalize_fuse(max(1, int(f)), steps)
 
     cands: List[Tuple[st.Backend, int]] = []
     for entry in base:
@@ -103,17 +103,21 @@ def _normalize_space(space, ndim, interior, swap, steps, fuse_space,
             b, f = entry
             # without a swap pair only single applications are measured, so
             # a requested window size would be reported but never timed
-            cands.append((b, _norm_fuse(b, max(1, int(f)))
-                          if swap is not None else 1))
+            cands.append((b, _norm_fuse(f) if swap is not None else 1))
         elif swap is not None:
             backends = [entry]
             if entry.kind == "pallas":
-                backends = [dataclasses.replace(entry, time_block=int(tb))
-                            for tb in time_block_space]
+                # expand over the search depths but keep the entry's own
+                # (possibly user-pinned) depth in the set — an explicitly
+                # requested configuration must be measured, not overwritten
+                tbs = dict.fromkeys(
+                    [int(getattr(entry, "time_block", 1) or 1)]
+                    + [int(tb) for tb in time_block_space])
+                backends = [dataclasses.replace(entry, time_block=tb)
+                            for tb in tbs]
             for b in backends:
                 for f in fuse_space:
-                    cands.append((b, _norm_fuse(b, max(1, min(int(f),
-                                                              steps)))))
+                    cands.append((b, _norm_fuse(f)))
         else:
             cands.append((entry, 1))
     # dedup while preserving order

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import analysis, ir, lowering
+from . import timeloop as _tl
 
 
 def _halo_exchange(local: jnp.ndarray, axis: int, mesh_axis: str,
@@ -104,8 +105,7 @@ def lower_distributed(kernel: ir.StencilIR,
     gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in all_grids}
     kernel_halos = {g: gh[g] for g in all_grids}
 
-    _inner = getattr(backend, "inner", None)
-    _k_inner = int(getattr(_inner, "time_block", 1) or 1)
+    _k_inner = _tl.backend_time_block(backend)
     if (getattr(backend, "time_steps", 1) > 1
             or (_k_inner > 1 and getattr(backend, "swap", None) is not None)):
         return _lower_time_skewed(kernel, info, interior_shape, backend,
@@ -261,8 +261,7 @@ def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
     through the XLA shrinking-region lowering, which has the identical
     halo/shell geometry as the in-kernel Pallas temporal blocks).
     """
-    inner = getattr(backend, "inner", None)
-    k_inner = int(getattr(inner, "time_block", 1) or 1)
+    k_inner = _tl.backend_time_block(backend)
     k = backend.time_steps * k_inner
     swap = backend.swap
     if swap is None:

@@ -180,10 +180,13 @@ class pallas(Backend):
     ``time_block=k`` enables in-kernel temporal blocking on the fused
     time-loop path (``st.timeloop``): each kernel invocation fetches a
     k·h-deep halo window per grid, advances k leapfrog steps in VMEM, and
-    writes only the final interiors back — HBM sees one read and one write
-    per grid per k steps instead of per step.  Requires k·h ≤ the block
-    extent on every axis (the default block geometry grows to fit) and a
-    ``swap`` pair on the timeloop."""
+    writes only the final interiors back (double-buffered) — per k steps
+    each advanced grid costs one expanded-window read, one destination
+    fetch and one block write instead of a read+write per step, an
+    asymptotically ~k× HBM-traffic cut (small depths can lose to the halo
+    growth; the autotuner measures).  Requires k·h ≤ the block extent on
+    every axis (the default block geometry grows to fit) and a ``swap``
+    pair on the timeloop."""
     kind: str = "pallas"
     template: str = "gmem"
     block: Optional[Tuple[int, ...]] = None
@@ -406,12 +409,18 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
             backend = dataclasses.replace(
                 backend, inner=dataclasses.replace(backend.inner,
                                                    time_block=int(tb)))
+        elif int(tb) != 1:
+            # silently running without blocking would let a user believe
+            # the depth is active while measuring the plain fused loop
+            raise ValueError(
+                f"time_block={tb} requires a pallas backend (or a "
+                f"distributed backend with a pallas inner); got "
+                f"'{backend.kind}'")
     fuse = call.fuse_steps
     if fuse is None and _CTX.active:
         fuse = _CTX.fuse_steps
-    if fuse is None:
-        fuse = call.steps
-    fuse = max(1, min(int(fuse), max(int(call.steps), 1)))
+    if fuse is not None:
+        fuse = max(1, int(fuse))
     swap = _tl.normalize_swap(k.ir, call.swap)
 
     key = ("timeloop", backend.cache_key(),
@@ -427,10 +436,11 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
             profile_cb=_CTX.add if _CTX.active else None)
         _CTX.add("codegen", time.perf_counter() - t0)
         k._cache[key] = engine
-    # distributed overlapped tiling bounds the window (k·h ≤ local extent)
-    # and in-kernel temporal blocking rounds it to a multiple of
-    # time_block; report the window size that actually runs
-    fuse = engine.effective_fuse(fuse)
+    # clamp the window to the loop length and the distributed overlapped-
+    # tiling bound (k·h ≤ local extent); report the size that actually
+    # runs.  In-kernel temporal blocking never alters the window — the
+    # between-hook cadence is honored exactly via in-window decomposition
+    fuse = engine.window_for(call.steps, fuse)
 
     def between_arrays(t, arrays):
         # surface current state to the user hook via the grid objects
@@ -441,6 +451,7 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
 
     arrays = {n: g.data for n, g in grids.items()}
     t0 = time.perf_counter()
+    # window_for is idempotent, so the reported window can be passed back
     arrays = engine.run(arrays, scalars, call.steps, fuse,
                         between_arrays if call.between else None)
     seconds = time.perf_counter() - t0

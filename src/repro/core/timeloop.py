@@ -20,8 +20,12 @@ that fusion for all three backends:
                  invocation advances k leapfrog steps entirely in VMEM
                  (expanded k·h halos, in-kernel temporal blocking) — the
                  fusion window is decomposed into ⌊kw/k⌋ k-step invocations
-                 plus a remainder of single steps, so any ``steps`` value
-                 stays exact while full windows are multiples of k.
+                 plus a remainder of single steps, so any window length
+                 runs exactly — ``fuse_steps`` (the host-sync / between-
+                 hook cadence) is honored as requested, never rounded to
+                 the temporal depth.  The k-step invocations double-buffer
+                 the swap pair: outputs land in spare padded buffers that
+                 ping-pong with the read buffers between invocations.
                  Modeled HBM traffic per window is accumulated in
                  ``codegen.TRAFFIC_COUNT`` alongside ``PAD_COUNT``.
   distributed  — a fusion window maps onto the overlapped-tiling /
@@ -50,6 +54,59 @@ import jax.numpy as jnp
 
 from . import ir as _ir
 from . import lowering
+
+
+def window_parts(kw: int, k_inner: int) -> list:
+    """Decompose a fusion window that is not a multiple of the temporal
+    depth into sub-programs: the largest ``k_inner`` multiple (depth
+    active) plus the remainder.  The pallas path decomposes *inside* one
+    program (⌊kw/k⌋ k-step invocations + single steps); the distributed
+    time-skewed lowering cannot, so the engine splits the window instead —
+    an indivisible window must degrade only its remainder to depth 1,
+    never the whole window."""
+    if k_inner > 1 and kw > k_inner and kw % k_inner:
+        return [kw - kw % k_inner, kw % k_inner]
+    return [kw]
+
+
+def backend_time_block(backend) -> int:
+    """Effective in-kernel temporal depth of a backend: the knob rides on
+    the backend itself for pallas, on the pallas ``inner`` for distributed
+    wrappers, and is 1 everywhere else.  The single reader shared by the
+    engine and the distributed lowering — they must agree on the depth or
+    the window decomposition and the exchange width disagree."""
+    if getattr(backend, "kind", "") == "distributed":
+        backend = getattr(backend, "inner", None)
+    return int(getattr(backend, "time_block", 1) or 1)
+
+
+def normalize_fuse(fuse_steps: Optional[int], steps: int,
+                   max_fuse: Optional[int] = None) -> int:
+    """Fusion-window normalization shared by the engine and the autotuner
+    (both must agree on the window that actually runs).
+
+    Clamp the request to the loop length and the overlapped-tiling bound
+    (``max_fuse``) — the hard constraints — and nothing else.
+    ``fuse_steps`` is the host-sync / ``between``-hook cadence (source
+    injection, diagnostics), which the engine honors *exactly*: in-kernel
+    temporal blocking never alters the window, because every window
+    decomposes into ⌊kw/k⌋ k-step invocations plus a single-step
+    remainder (in-program on the pallas path, via ``window_parts`` on the
+    distributed path).  Rounding a window to the temporal depth would
+    silently move hook firings — changing physics, not just speed."""
+    steps = int(steps)
+    if steps <= 0:
+        return 1
+    if fuse_steps is None:
+        fuse = steps
+    else:
+        fuse = int(fuse_steps)
+        if fuse < 1:
+            raise ValueError("fuse_steps must be >= 1")
+    fuse = min(fuse, steps)
+    if max_fuse is not None:
+        fuse = min(fuse, max_fuse)
+    return fuse
 
 
 def normalize_swap(kernel: _ir.StencilIR,
@@ -132,8 +189,7 @@ class TimeloopEngine:
         if backend.kind == "distributed":
             if self.swap is None:
                 raise ValueError("distributed timeloop requires swap=(a, b)")
-            inner = getattr(backend, "inner", None)
-            self.time_block = int(getattr(inner, "time_block", 1) or 1)
+            self.time_block = backend_time_block(backend)
         # overlapped tiling bound: a k-step window exchanges k·h-wide halos,
         # which must fit in the local shard extent on every decomposed axis
         self.max_fuse: Optional[int] = None
@@ -175,19 +231,34 @@ class TimeloopEngine:
             def win(padded, scalars):
                 from jax import lax
 
-                def body_k(_, p):
-                    out = plan.step(p, scalars)
-                    # a k-step invocation leaves buffer↔name bindings
-                    # untouched; k leapfrog rotations net to k mod 2
-                    return _rotate(out, swap) if (swap and k % 2) else out
+                def body_k(_, carry):
+                    # double-buffered k-step invocation: outputs land in
+                    # the spare buffers (the kernel must not write the
+                    # buffers whose k·h windows other blocks still read),
+                    # and the buffers just read become the next
+                    # invocation's spares.  A k-step invocation leaves
+                    # buffer↔name bindings untouched; k leapfrog rotations
+                    # net to k mod 2, applied to the output AND spare
+                    # names together so every output name keeps a
+                    # destination carrying its own ring (padding + halo).
+                    p, sp = carry
+                    out = plan.step(p, scalars, spares=sp)
+                    new_sp = {g: p[g] for g in plan.step_out_grids}
+                    if swap and k % 2:
+                        out = _rotate(out, swap)
+                        new_sp = _rotate(new_sp, swap)
+                    return out, new_sp
 
                 def body_1(_, p):
                     out = plan1.step(p, scalars)
                     return _rotate(out, swap) if swap else out
 
                 p = dict(padded)
-                if m:
-                    p = lax.fori_loop(0, m, body_k, p)
+                if m and k > 1:
+                    p, _ = lax.fori_loop(0, m, body_k,
+                                         (p, plan.make_spares(p)))
+                elif m:
+                    p = lax.fori_loop(0, m, body_1, p)
                 if r:
                     p = lax.fori_loop(0, r, body_1, p)
                 return p
@@ -222,23 +293,11 @@ class TimeloopEngine:
         self._windows[kw] = fn
         return fn
 
-    def effective_fuse(self, fuse_steps: int) -> int:
-        """Normalize a requested fusion-window size: clamp to the
-        overlapped-tiling bound, then round DOWN to a multiple of the
-        in-kernel ``time_block`` so every k-step invocation is fully used.
-        A window smaller than k is honored as-is (it runs as single steps)
-        — ``fuse_steps`` is the host-sync / ``between``-hook cadence, which
-        temporal blocking must never stretch; rounding down also keeps the
-        result within the overlapped-tiling clamp."""
-        fuse = int(fuse_steps)
-        if fuse < 1:
-            raise ValueError("fuse_steps must be >= 1")
-        if self.max_fuse is not None:
-            fuse = min(fuse, self.max_fuse)
-        k = self.time_block
-        if k > 1 and fuse >= k:
-            fuse = (fuse // k) * k
-        return fuse
+    def window_for(self, steps: int, fuse_steps: Optional[int] = None) -> int:
+        """The fusion-window size that actually runs for this request
+        (see ``normalize_fuse``).  Idempotent, so callers may report the
+        result and pass it back to ``run``."""
+        return normalize_fuse(fuse_steps, steps, self.max_fuse)
 
     # -- driver ------------------------------------------------------------
     def run(self, arrays: Dict[str, jnp.ndarray],
@@ -246,7 +305,7 @@ class TimeloopEngine:
             steps: int,
             fuse_steps: Optional[int] = None,
             between: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
-        fuse = self.effective_fuse(fuse_steps or steps)
+        fuse = self.window_for(steps, fuse_steps)
         scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
         arrays = dict(arrays)
         t = 0
@@ -278,11 +337,16 @@ class TimeloopEngine:
                 arrays = _rotate(arrays, self.swap)
             return plan.from_padded(padded, arrays)
         # distributed: the k-step (time-skewed for kw>1) program does its
-        # own internal rotation for kw>1; rotate host-side for kw==1
-        out = self._window(kw)(arrays, scal)
-        if kw == 1 and self.swap:
-            out = _rotate(out, self.swap)
-        return out
+        # own internal rotation for kw>1; rotate host-side for kw==1.
+        # A window indivisible by the inner temporal depth is split into
+        # (largest multiple, remainder) sub-programs so the depth stays
+        # active for the bulk of the window (no between hook runs at the
+        # split — it is not a fusion-window boundary)
+        for part in window_parts(kw, self.time_block):
+            arrays = self._window(part)(arrays, scal)
+            if part == 1 and self.swap:
+                arrays = _rotate(arrays, self.swap)
+        return arrays
 
 
 def run_timeloop(kernel: _ir.StencilIR,

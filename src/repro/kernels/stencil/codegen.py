@@ -43,9 +43,15 @@ Two execution modes share the template bodies:
     window (``pl.Unblocked`` BlockSpec) instead of once per neighbor
     delta.  With ``backend.time_block=k`` the kernel stage is *temporally
     blocked* (``_make_body_temporal``): windows carry k·h-deep expanded
-    halos and one invocation advances k leapfrog steps in VMEM, so HBM
-    sees one read+write per grid per k steps (``TRAFFIC_COUNT`` tracks
-    the modeled traffic).
+    halos and one invocation advances k leapfrog steps in VMEM.  The
+    k-step outputs are *double-buffered*: they alias dedicated
+    destination operands instead of the read buffers, because the
+    expanded windows overlap neighboring blocks' output interiors and the
+    TPU grid runs sequentially (see ``PallasPlan``).  Per k steps each
+    advanced grid thus costs one expanded-window read, one destination
+    fetch and one block write — ~k× less traffic asymptotically, though
+    halo growth + the destination fetch can make small depths a net loss
+    (``TRAFFIC_COUNT`` tracks the modeled traffic honestly).
 
 The expression evaluator is shared with the XLA lowering
 (`repro.core.lowering.eval_expr`), so all backends execute the same IR.
@@ -709,6 +715,15 @@ def _make_body_temporal(kernel, info, spec, *, template: str, mem_type: str,
     later sub-steps unchanged (per-step boundary semantics).  Only the
     final ``B`` interior of each swap frame is written back — HBM sees one
     read and one write per grid per ``k`` steps.
+
+    The write-back is *double-buffered*: outputs alias dedicated
+    destination operands (``refs[n_in:n_in+len(step_out)]``, never read
+    here), NOT the window operands.  The expanded windows reach ``k·h``
+    into neighboring blocks' output interiors, and on real TPU the grid
+    runs sequentially — aliasing the read buffers in place would let
+    later blocks fetch halo data that earlier blocks already advanced
+    ``k`` steps (interpret mode reads inputs functionally and hides the
+    hazard).
     """
     B, gh, ndim, R = spec["B"], spec["gh"], spec["ndim"], spec["R"]
     opnd_index, scal_names, dtype = (
@@ -726,8 +741,11 @@ def _make_body_temporal(kernel, info, spec, *, template: str, mem_type: str,
     def body(*refs):
         n_in = len(opnd_index)
         in_refs = refs[:n_in]
-        scal_refs = refs[n_in:n_in + len(scal_names)]
-        out_refs = refs[n_in + len(scal_names):]
+        # destination operands (aliased to the outputs) sit between the
+        # read windows and the scalars; their values are never read
+        n_dst = len(step_out)
+        scal_refs = refs[n_in + n_dst:n_in + n_dst + len(scal_names)]
+        out_refs = refs[n_in + n_dst + len(scal_names):]
 
         scalars = {n: r[0, 0] for n, r in zip(scal_names, scal_refs)}
         frames = {g: in_refs[i][...] for g, i in opnd_index.items()}
@@ -801,10 +819,18 @@ class PallasPlan:
                      windows (one deduplicated operand per grid) and
                      writes each output grid in-place in padded layout
                      (``input_output_aliases``), passing the old value
-                     through outside the interior so halos survive.  With
+                     through outside the interior so halos survive.  The
+                     in-place aliasing is only legal because outputs are
+                     restricted to center-only taps: every read of an
+                     aliased buffer stays inside the block the same
+                     program instance writes.  With
                      ``backend.time_block=k`` one call advances k leapfrog
                      steps on k·h-expanded windows and writes *both* swap
-                     buffers back (see ``_make_body_temporal``).
+                     buffers back — but the k·h windows overlap
+                     neighboring blocks' output interiors, so the outputs
+                     are double-buffered: they alias dedicated
+                     destination operands (``make_spares``), never the
+                     read windows (see ``_make_body_temporal``).
     ``from_padded``— write padded interiors back into full (grid-halo'd)
                      arrays at a fusion boundary.
 
@@ -918,12 +944,28 @@ class PallasPlan:
             in_specs.append(pl.BlockSpec(
                 tuple(B[ax] + 2 * w[ax] for ax in range(ndim)),
                 _window_map(w), indexing_mode=pl.Unblocked()))
+        if k > 1:
+            # double-buffered outputs: the k·h-expanded windows reach into
+            # neighboring blocks' output interiors, and the TPU grid runs
+            # sequentially — aliasing the read buffers in place would let
+            # later blocks fetch halos already advanced k steps.  Outputs
+            # therefore alias dedicated block-sized destination operands
+            # (one per advanced grid, never read by the body); the engine
+            # ping-pongs them against the read buffers between invocations.
+            for _ in step_out:
+                in_specs.append(pl.BlockSpec(
+                    B, lambda *gi: tuple(g + 1 for g in gi)))
+            aliases = {len(opnd_grids) + oi: oi
+                       for oi in range(len(step_out))}
+        else:
+            # k=1 may alias in place: outputs are center-only-tapped, so
+            # no program instance reads outside the block it writes
+            aliases = {opnd_grids.index(g): oi
+                       for oi, g in enumerate(step_out)}
         for _ in scal_names:
             in_specs.append(pl.BlockSpec((1, 1), lambda *gi: (0, 0)))
         out_specs = [pl.BlockSpec(B, lambda *gi: tuple(g + 1 for g in gi))
                      for _ in step_out]
-        aliases = {opnd_grids.index(g): oi
-                   for oi, g in enumerate(step_out)}
 
         self.kernel, self.info, self.backend = kernel, info, backend
         self.halos = {g: tuple(halos[g]) for g in opnd_grids}
@@ -944,10 +986,19 @@ class PallasPlan:
 
     # -- traffic model -----------------------------------------------------
     @property
+    def _dest_fetches(self) -> int:
+        """Destination-operand block fetches per invocation: the k>1
+        double-buffered outputs alias dedicated operands whose blocks are
+        DMA'd in like any input even though the body never reads them."""
+        return len(self.step_out_grids) if self.time_block > 1 else 0
+
+    @property
     def grid_reads_per_step(self) -> float:
-        """Grid-window HBM fetches per time step (each invocation reads one
-        window per operand grid and covers ``time_block`` steps)."""
-        return len(self.opnd_grids) / self.time_block
+        """Grid HBM fetches per time step (each invocation reads one window
+        per operand grid plus the destination blocks, and covers
+        ``time_block`` steps)."""
+        return ((len(self.opnd_grids) + self._dest_fetches)
+                / self.time_block)
 
     @property
     def grid_writes_per_step(self) -> float:
@@ -956,23 +1007,34 @@ class PallasPlan:
 
     def hbm_bytes_per_step(self, itemsize: int = 4) -> float:
         """Modeled HBM bytes moved per time step by the kernel stage: every
-        block fetches one expanded-halo window per operand grid and writes
-        one ``B`` block per output, amortized over ``time_block`` steps."""
+        block fetches one expanded-halo window per operand grid (plus the
+        block-sized destination operands when double-buffered) and writes
+        one ``B`` block per output, amortized over ``time_block`` steps.
+
+        Like ``TRAFFIC_COUNT`` this models the steady-state kernel stage
+        only: one-time layout-stage costs per fusion window — the
+        ``to_padded`` pads and the ``make_spares`` copies — are excluded
+        (they amortize over the window length, which the plan does not
+        know)."""
         nblocks = math.prod(self.nb)
         read = sum(math.prod(self.B[ax] + 2 * self.wf[g][ax]
                              for ax in range(self.ndim))
                    for g in self.opnd_grids)
+        read += self._dest_fetches * math.prod(self.B)
         write = len(self.step_out_grids) * math.prod(self.B)
         return nblocks * (read + write) * itemsize / self.time_block
 
     def count_window(self, steps: int) -> None:
         """Accumulate modeled traffic for a fused window of ``steps`` time
         steps into ``TRAFFIC_COUNT`` (windows of ``time_block`` plus a
-        remainder of single steps, mirroring the engine's decomposition)."""
+        remainder of single steps, mirroring the engine's decomposition).
+        Remainder steps run through the single-step plan, which aliases in
+        place and fetches no destination blocks."""
         k = self.time_block
         m, r = divmod(int(steps), k)
-        invocations = m + r
-        TRAFFIC_COUNT["grid_reads"] += invocations * len(self.opnd_grids)
+        TRAFFIC_COUNT["grid_reads"] += (
+            m * (len(self.opnd_grids) + self._dest_fetches)
+            + r * len(self.opnd_grids))
         TRAFFIC_COUNT["grid_writes"] += (m * len(self.step_out_grids)
                                          + r * len(self.out_grids))
         TRAFFIC_COUNT["steps"] += int(steps)
@@ -1037,15 +1099,37 @@ class PallasPlan:
             self._calls[key] = call
         return call
 
+    def make_spares(self, padded: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+        """Initial destination buffers for the double-buffered
+        ``time_block>1`` kernel stage.  The kernel writes only interior
+        blocks; the surrounding ring blocks (zero padding + grid halo) are
+        taken over from the destination, so each spare starts as a copy of
+        its grid's current buffer (identical ring — halo cells never change
+        across steps)."""
+        return {g: jnp.copy(padded[g]) for g in self.step_out_grids}
+
     def step(self, padded: Dict[str, jnp.ndarray],
-             scalars: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+             scalars: Dict[str, jnp.ndarray],
+             spares: Optional[Dict[str, jnp.ndarray]] = None
+             ) -> Dict[str, jnp.ndarray]:
         """One kernel invocation entirely in padded layout (jittable):
         one time step when ``time_block`` is 1, else ``time_block`` leapfrog
-        steps with both swap buffers advanced in place.  Buffer↔name
-        bindings are untouched; the caller applies the leapfrog rotation
-        parity (``time_block`` rotations) to the names."""
+        steps with both swap buffers advanced.  With ``time_block>1`` the
+        caller must pass ``spares`` — one destination buffer per
+        ``step_out_grids`` entry (``make_spares``); outputs land in the
+        spares' memory so the read buffers stay intact for the whole
+        sequential device grid, and the buffers just read become the next
+        invocation's spares.  Buffer↔name bindings are untouched; the
+        caller applies the leapfrog rotation parity (``time_block``
+        rotations) to the names."""
         dtype = padded[self.out_grids[0]].dtype
         ops = [padded[g] for g in self.opnd_grids]
+        if self.time_block > 1:
+            if spares is None:
+                raise ValueError(
+                    "time_block > 1 kernel stage is double-buffered: pass "
+                    "spares= destination buffers (plan.make_spares)")
+            ops += [spares[g] for g in self.step_out_grids]
         ops += [jnp.asarray(scalars[n], jnp.float32).reshape(1, 1)
                 for n in self.scal_names]
         outs = self._call_for(dtype)(*ops)

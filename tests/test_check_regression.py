@@ -1,0 +1,61 @@
+"""CI benchmark regression guard: the guarded series must be
+machine-independent (same-run speedup ratios and the deterministic HBM
+model), since the committed baseline and the CI runner are different
+machines."""
+import importlib.util
+import os
+
+_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "check_regression.py")
+_spec = importlib.util.spec_from_file_location("check_regression", _PATH)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def _bench(star_speed, ac_speed, hbm_red):
+    return {
+        "star2d1r": {"speedup": star_speed,
+                     "fused_steps_per_s": 12345.0},
+        "acoustic_iso_3d": {"speedup": ac_speed},
+        "star2d1r_pallas": {
+            "time_block_4": {"hbm_reduction_vs_time_block_1": hbm_red}},
+    }
+
+
+def test_guard_uses_only_machine_independent_series():
+    """Absolute steps/s must not be guarded: a fresh run on a 10x slower
+    machine with identical ratios passes."""
+    base = _bench(6.0, 2.4, 1.6)
+    fresh = _bench(6.0, 2.4, 1.6)
+    fresh["star2d1r"]["fused_steps_per_s"] = 1234.5   # 10x slower runner
+    failures, _ = cr.check(base, fresh)
+    assert failures == []
+    for path, _tol in cr.GUARDED:
+        assert "steps_per_s" not in path
+
+
+def test_guard_fails_on_ratio_regression():
+    # fusion degrading to ~the per-step path: speedup 6.0 -> 1.2
+    failures, _ = cr.check(_bench(6.0, 2.4, 1.6), _bench(1.2, 2.4, 1.6))
+    assert len(failures) == 1 and "star2d1r.speedup" in failures[0]
+    # the HBM model is deterministic, so its tolerance is tight
+    failures, _ = cr.check(_bench(6.0, 2.4, 1.6), _bench(6.0, 2.4, 1.0))
+    assert len(failures) == 1 and "hbm_reduction" in failures[0]
+
+
+def test_guard_tolerates_cross_machine_noise_and_missing_keys():
+    # the swings observed between two runs of the same code must pass
+    failures, _ = cr.check(_bench(5.9, 2.4, 1.585),
+                           _bench(5.3, 1.7, 1.585))
+    assert failures == []
+    base = _bench(6.0, 2.4, 1.6)
+    del base["acoustic_iso_3d"]
+    failures, notes = cr.check(base, _bench(6.0, 2.4, 1.6))
+    assert failures == []
+    assert any("skip acoustic_iso_3d" in n for n in notes)
+
+
+def test_guard_threshold_override():
+    failures, _ = cr.check(_bench(6.0, 2.4, 1.6), _bench(5.0, 2.4, 1.6),
+                           threshold=0.05)
+    assert len(failures) == 1 and "star2d1r.speedup" in failures[0]

@@ -302,6 +302,139 @@ def test_time_block_reduces_counted_traffic():
     assert p1.hbm_bytes_per_step() > p4.hbm_bytes_per_step()
 
 
+def test_time_block_outputs_never_alias_read_windows():
+    """The k>1 kernel reads k·h-deep windows that overlap *neighboring*
+    blocks' output interiors; on real TPU the grid runs sequentially, so
+    outputs must alias only the dedicated block-sized destination operands
+    (double buffering), never the window operands — otherwise later blocks
+    would fetch halo data already advanced k steps (interpret mode reads
+    inputs functionally and hides the hazard)."""
+    k = suite.get_kernel("star2d2r")
+    halos = {g: k.info.halo for g in k.ir.grid_params}
+    plan = codegen.plan_pallas(k.ir, halos, (16, 24),
+                               st.pallas(template="gmem", time_block=4),
+                               swap=("v", "u"))
+    n_win = len(plan.opnd_grids)
+    # outputs alias the destination operands appended after the windows
+    assert set(plan._aliases) == {n_win, n_win + 1}, plan._aliases
+    # destinations are block-sized: each program instance only donates the
+    # block it writes, nothing another instance's window reads
+    for i in plan._aliases:
+        assert tuple(plan._in_specs[i].block_shape) == tuple(plan.B)
+    # every read window keeps its expanded halo and is never aliased
+    for gi, g in enumerate(plan.opnd_grids):
+        assert gi not in plan._aliases
+        assert tuple(plan._in_specs[gi].block_shape) == tuple(
+            plan.B[ax] + 2 * plan.wf[g][ax] for ax in range(plan.ndim))
+    # the double-buffered stage refuses to run without destinations
+    with pytest.raises(ValueError, match="double-buffer"):
+        plan.step({g: jnp.zeros(plan.padded_shape, jnp.float32)
+                   for g in plan.opnd_grids}, {})
+    # the k=1 plan still aliases in place — legal because its outputs are
+    # center-only-tapped (window == block)
+    p1 = codegen.plan_pallas(k.ir, halos, (16, 24),
+                             st.pallas(template="gmem"), swap=("v", "u"))
+    for gi in p1._aliases:
+        assert tuple(p1._in_specs[gi].block_shape) == tuple(p1.B)
+
+
+def test_defaulted_fuse_keeps_between_cadence():
+    """A defaulted fuse_steps ('fuse the whole loop') must not be rounded
+    to the temporal depth: steps=10, k=4 runs ONE window of 10 (two k-step
+    invocations + two singles) and the between hook never fires — enabling
+    time_block must not change source-injection timing."""
+    name = "star2d1r"
+    k = suite.get_kernel(name)
+    want = _per_step_reference(name, steps=10)
+    grids = _mk_grids(name)
+    seen = []
+    res = st.launch(backend=st.pallas(template="gmem", time_block=4))(
+        lambda u, v: st.timeloop(10, swap=("v", "u"),
+                                 between=lambda t, gs: seen.append(t))(k)(
+            u, v))(grids["u"], grids["v"])
+    assert res.value.fuse_steps == 10
+    assert res.value.windows == 1
+    assert seen == []
+    got = {n: np.asarray(g.data) for n, g in grids.items()}
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6)
+
+
+@pytest.mark.parametrize("time_block", (3, 5))
+def test_time_block_odd_rotation_parity(time_block):
+    """Odd temporal depths exercise the k%2 branch of the fused-loop carry
+    (output names AND spare destinations must rotate together)."""
+    name = "star2d1r"
+    steps = 7                              # k-invocations + remainder
+    want = _per_step_reference_shape(name, TB_SHAPE, steps)
+    k = suite.get_kernel(name)
+    grids = _mk_grids_shape(name, TB_SHAPE)
+    st.launch(backend=st.pallas(template="gmem", time_block=time_block))(
+        lambda u, v: st.timeloop(steps, swap=("v", "u"))(k)(u, v))(
+        grids["u"], grids["v"])
+    got = {n: np.asarray(g.data) for n, g in grids.items()}
+    for g in ("u", "v"):
+        np.testing.assert_allclose(got[g], want[g], atol=1e-6,
+                                   err_msg=f"k={time_block}/{g}")
+
+
+def test_explicit_whole_loop_fuse_not_rounded():
+    """An explicit fuse_steps >= steps covers the whole loop and must not
+    be rounded to the temporal depth either — same cadence invariant as
+    the defaulted window."""
+    name = "star2d1r"
+    k = suite.get_kernel(name)
+    grids = _mk_grids(name)
+    seen = []
+    res = st.launch(backend=st.pallas(template="gmem", time_block=4))(
+        lambda u, v: st.timeloop(10, swap=("v", "u"), fuse_steps=16,
+                                 between=lambda t, gs: seen.append(t))(k)(
+            u, v))(grids["u"], grids["v"])
+    assert res.value.fuse_steps == 10
+    assert res.value.windows == 1
+    assert seen == []
+
+
+def test_autotune_expansion_keeps_user_time_block():
+    """A user-pinned time_block on a plain space entry must be measured,
+    not silently overwritten by the time_block_space expansion."""
+    b = st.pallas(template="gmem", time_block=8)
+    cands = autotune._normalize_space([b], 2, (16, 24), ("v", "u"),
+                                      steps=8, fuse_space=(8,),
+                                      time_block_space=(1, 2))
+    tbs = [getattr(bb, "time_block", 1) for bb, _ in cands]
+    assert tbs == [8, 1, 2], cands
+
+
+def test_distributed_window_decomposition_keeps_inner_depth():
+    """A distributed window indivisible by the inner temporal depth must
+    split into (largest multiple, remainder) sub-programs — not silently
+    run the whole window with the depth disabled."""
+    from repro.core import timeloop as tl
+    assert tl.window_parts(10, 4) == [8, 2]
+    assert tl.window_parts(8, 4) == [8]       # exact multiple: one program
+    assert tl.window_parts(3, 4) == [3]       # below the depth: as-is
+    assert tl.window_parts(10, 1) == [10]     # no inner depth
+    assert tl.window_parts(9, 4) == [8, 1]    # single-step remainder
+
+
+def test_autotune_norm_fuse_matches_engine_window():
+    """Autotune normalizes candidate windows exactly like the engine
+    (shared timeloop.normalize_fuse): requests ≥ steps collapse to one
+    whole-loop window and deduplicate; sub-loop windows are honored as
+    requested (never rounded to the temporal depth)."""
+    b = st.distributed(inner=st.pallas(template="gmem", time_block=2))
+    cands = autotune._normalize_space(
+        [b, (b, 9)], 2, (16, 24), ("v", "u"), steps=8, fuse_space=(8,))
+    # expansion gives (b, 8); the explicit pair collapses 9 -> 8 (whole
+    # loop) and deduplicates against it
+    assert [f for _, f in cands] == [8], cands
+    p = st.pallas(template="gmem", time_block=4)
+    cands = autotune._normalize_space(
+        [(p, 6)], 2, (16, 24), ("v", "u"), steps=20, fuse_space=())
+    assert [f for _, f in cands] == [6], cands   # not rounded to 4
+
+
 def test_time_block_one_pad_per_grid_per_window():
     """Temporal blocking keeps the one-pad-per-window layout invariant."""
     codegen.reset_pad_count()
@@ -342,20 +475,32 @@ def test_time_block_validation():
             lambda u, v: st.map(e=u.shape)(k)(u, v))(grids["u"], grids["v"])
     with pytest.raises(ValueError):
         st.pallas(time_block=0)
+    # a launch-level override that cannot apply must not be silently
+    # ignored (the user would measure the plain fused loop believing the
+    # temporal depth is active)
+    g2 = _mk_grids("star2d2r")
+    with pytest.raises(ValueError, match="pallas backend"):
+        st.launch(backend=st.xla(), time_block=2)(
+            lambda u, v: st.timeloop(2, swap=("v", "u"))(k)(u, v))(
+            g2["u"], g2["v"])
 
 
-def test_launch_time_block_override_and_window_rounding():
-    """st.launch(time_block=k) overrides the backend knob; the reported
-    fusion window is rounded to a multiple of k."""
+def test_launch_time_block_override_honors_window():
+    """st.launch(time_block=k) overrides the backend knob; the requested
+    fusion window is honored exactly (each window runs ⌊kw/k⌋ k-step
+    invocations plus single-step remainder), never rounded to k."""
     name = "star2d1r"
     k = suite.get_kernel(name)
     want = _per_step_reference(name, steps=10)
     grids = _mk_grids(name)
+    seen = []
     res = st.launch(backend=st.pallas(template="gmem"), time_block=2)(
-        lambda u, v: st.timeloop(10, swap=("v", "u"), fuse_steps=3)(k)(
+        lambda u, v: st.timeloop(10, swap=("v", "u"), fuse_steps=3,
+                                 between=lambda t, gs: seen.append(t))(k)(
             u, v))(grids["u"], grids["v"])
-    assert res.value.fuse_steps == 2       # 3 rounded down to a multiple
-    assert res.value.windows == 5
+    assert res.value.fuse_steps == 3       # cadence exactly as requested
+    assert res.value.windows == 4
+    assert seen == [3, 6, 9]
     got = {n: np.asarray(g.data) for n, g in grids.items()}
     for g in ("u", "v"):
         np.testing.assert_allclose(got[g], want[g], atol=1e-6)

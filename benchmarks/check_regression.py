@@ -24,6 +24,13 @@ env var override every tolerance at once when set.  Missing keys on
 either side are reported but do not fail the guard (new benchmarks may
 add or rename rows).
 
+The guard set is selected by the benchmark kind, auto-detected from the
+fresh JSON's top-level keys: ``BENCH_timeloop.json`` guards fusion /
+temporal-blocking ratios, ``BENCH_serve.json`` guards the same-run
+batched-vs-serial serving speedup plus two *absolute* invariants of the
+persistent autotune cache — a warm cache must serve with **zero**
+measured candidates (threshold overrides never relax absolutes).
+
     python -m benchmarks.check_regression baseline.json fresh.json
 """
 from __future__ import annotations
@@ -33,12 +40,32 @@ import json
 import os
 import sys
 
-GUARDED = (
+GUARDED_TIMELOOP = (
     # (dotted path, max fractional drop)
     ("star2d1r.speedup", 0.50),
     ("acoustic_iso_3d.speedup", 0.50),
     ("star2d1r_pallas.time_block_4.hbm_reduction_vs_time_block_1", 0.10),
+    ("star3d4r_pallas.time_block_4.hbm_reduction_vs_time_block_1", 0.10),
 )
+GUARDED = GUARDED_TIMELOOP  # backwards-compat alias
+
+GUARDED_SERVE = (
+    # same-run ratio, machine-independent up to scheduling noise
+    ("serve_stream.batched_vs_serial_speedup", 0.50),
+)
+
+#: (dotted path, required value) checked on the FRESH file only —
+#: deterministic counters, not timings, so equality is exact
+ABSOLUTE_SERVE = (
+    ("autotune_cache.warm.measured_candidates", 0),
+)
+
+
+def _guards_for(fresh: dict):
+    """(ratio guards, absolute guards) for the benchmark kind of a file."""
+    if "serve_stream" in fresh:
+        return GUARDED_SERVE, ABSOLUTE_SERVE
+    return GUARDED_TIMELOOP, ()
 
 
 def _get(d: dict, path: str):
@@ -51,10 +78,13 @@ def _get(d: dict, path: str):
 
 
 def check(baseline: dict, fresh: dict, threshold: float = None):
-    """Return (failures, notes) comparing guarded ratio series.
-    ``threshold`` overrides every per-series tolerance when not None."""
+    """Return (failures, notes) comparing guarded ratio series (and, for
+    the serving benchmark, exact counter invariants on the fresh file).
+    ``threshold`` overrides every per-series ratio tolerance when not
+    None; absolute checks are never relaxed."""
     failures, notes = [], []
-    for path, tol in GUARDED:
+    guarded, absolute = _guards_for(fresh)
+    for path, tol in guarded:
         if threshold is not None:
             tol = threshold
         b = _get(baseline, path)
@@ -67,6 +97,13 @@ def check(baseline: dict, fresh: dict, threshold: float = None):
         line = (f"{path}: baseline {b:.2f}x -> fresh {f:.2f}x "
                 f"({ratio:.2f}, tolerance {tol:.0%})")
         if ratio < 1.0 - tol:
+            failures.append(line)
+        else:
+            notes.append(line)
+    for path, want in absolute:
+        f = _get(fresh, path)
+        line = f"{path}: fresh {f!r} (required {want!r})"
+        if f is None or f != want:
             failures.append(line)
         else:
             notes.append(line)

@@ -77,34 +77,38 @@ def _bench_star2d1r(steps: int, shape, repeats: int = 3) -> Dict:
     }
 
 
-def _bench_star2d1r_pallas(steps: int, shape, repeats: int = 5,
-                           time_blocks=(1, 2, 4)) -> Dict:
+def _bench_pallas_sweep(name: str, steps: int, shape, repeats: int = 5,
+                        time_blocks=(1, 2, 4)) -> Dict:
     """Fused pallas path (interpret on CPU) across temporal depths: wall
     clock plus the plan's modeled HBM bytes per step — the k× traffic
-    reduction is the column that carries to real TPUs."""
-    k = suite.get_kernel("star2d1r")
+    reduction is the column that carries to real TPUs.  Used for the 5-pt
+    star2d1r and the paper's headline 25-point star3d4r (whose order-4
+    halo needs a domain that admits the k·h=16 expanded window at k=4)."""
+    k = suite.get_kernel(name)
     swap = suite.swap_pair(k.name)
     halos = {g: k.info.halo for g in k.ir.grid_params}
+    if shape is None:  # the suite's per-order default
+        shape = next(iter(suite.make_grids(name).values())).shape
     rows = {}
     for tb in time_blocks:
         backend = st.pallas(template="gmem", time_block=tb)
         plan = codegen.plan_pallas(k.ir, halos, tuple(shape), backend,
                                    swap=swap)
 
-        def fused(u, v, iters):
-            return st.timeloop(iters, swap=swap)(k)(u, v)
+        def fused(*args):
+            return st.timeloop(steps, swap=swap)(k)(*args)
 
         run = st.launch(backend=backend)
-        g = suite.make_grids("star2d1r", shape=shape)
-        run(fused)(*g.values(), steps)   # warmup compiles the real window
+        g = suite.make_grids(name, shape=shape)
+        run(fused)(*g.values())          # warmup compiles the real window
         best = float("inf")
         for _ in range(repeats):
-            g = suite.make_grids("star2d1r", shape=shape)
+            g = suite.make_grids(name, shape=shape)
             t0 = time.perf_counter()
-            run(fused)(*g.values(), steps)
+            run(fused)(*g.values())
             best = min(best, time.perf_counter() - t0)
         rows[f"time_block_{tb}"] = {
-            "kernel": "star2d1r", "backend": "pallas_interpret",
+            "kernel": name, "backend": "pallas_interpret",
             "template": "gmem", "time_block": tb, "shape": list(shape),
             "steps": steps,
             "fused_seconds": best,
@@ -154,8 +158,13 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
         "star2d1r": _bench_star2d1r(steps, (128, 128) if fast else (256, 256)),
         "acoustic_iso_3d": _bench_acoustic(
             steps, (24, 24, 24) if fast else (48, 48, 48)),
-        "star2d1r_pallas": _bench_star2d1r_pallas(
-            10 if fast else 24, (64, 64) if fast else (128, 128)),
+        "star2d1r_pallas": _bench_pallas_sweep(
+            "star2d1r", 10 if fast else 24,
+            (64, 64) if fast else (128, 128)),
+        # the paper's headline 25-point star: suite default (32, 32, 64)
+        # admits the full time_block ∈ {1, 2, 4} sweep (k·h = 16 ≤ block)
+        "star3d4r_pallas": _bench_pallas_sweep(
+            "star3d4r", 4 if fast else 8, None, repeats=1 if fast else 2),
     }
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)

@@ -26,11 +26,28 @@ for each distinct configuration once.
 Results are cached per (kernel, grid geometry, search space, iters,
 time-loop configuration) so repeated launches pay once; a custom ``space``
 or ``iters`` gets its own cache entry (``clear_cache()`` resets).
+
+The in-process ``_CACHE`` is a read-through layer over an optional
+**on-disk JSON cache** (one file per entry, atomic tmp-then-rename
+writes), so a warm server process never re-measures configurations a
+previous process already tuned.  Disk entries are keyed by (kernel
+fingerprint, interior *shape bucket*, search-space/time-loop
+configuration, jax backend) with schema versioning — a schema bump or a
+different search space simply misses.  Enable it with the
+``REPRO_AUTOTUNE_CACHE=<dir>`` environment variable or the
+``cache_dir=`` argument to ``tune``.  ``MEASURE_COUNT`` counts actually
+measured candidates; a warm-cache hit leaves it untouched (asserted in
+CI via ``benchmarks/serve.py``).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import hashlib
 import itertools
+import json
+import os
+import tempfile
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -42,10 +59,41 @@ from . import timeloop as _tl
 
 _CACHE: Dict = {}
 
+#: bump when the on-disk entry layout changes — old entries then miss
+SCHEMA_VERSION = 1
+
+#: environment variable naming the on-disk cache directory
+CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
+
+#: measured-candidate counter: ``MEASURE_COUNT["measured_candidates"]``
+#: increments once per (backend, fuse) configuration actually timed.
+#: A warm cache (in-process or disk) serves without touching it.
+MEASURE_COUNT: collections.Counter = collections.Counter()
+
 
 def clear_cache() -> None:
-    """Drop all memoized tuning results."""
+    """Drop all memoized tuning results (in-process layer only)."""
     _CACHE.clear()
+
+
+def reset_measure_count() -> None:
+    MEASURE_COUNT.clear()
+
+
+def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
+    """Round each interior extent up to a power of two (floor 8).
+
+    Disk cache entries and the serving layer share this bucketing, so
+    mixed request sizes map onto a small set of compiled/tuned
+    configurations."""
+    return tuple(max(8, 1 << (int(s) - 1).bit_length()) for s in shape)
+
+
+def kernel_fingerprint(kernel: st.Kernel) -> str:
+    """Content hash of a kernel: name + its StencilIR repr.  Editing the
+    kernel body changes the fingerprint, invalidating disk entries."""
+    text = f"{kernel.name}:{kernel.ir!r}"
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
 
 
 @dataclasses.dataclass
@@ -54,6 +102,135 @@ class TuneResult:
     seconds: float
     trials: List[Tuple[st.Backend, int, float]]  # (backend, fuse_steps, s)
     fuse_steps: int = 1
+
+
+# --------------------------------------------------------------------------
+# on-disk cache (read-through under _CACHE)
+# --------------------------------------------------------------------------
+def _backend_to_json(b) -> Optional[dict]:
+    """JSON form of a tunable backend (xla / pallas).  Distributed
+    backends carry live mesh references and are not persisted."""
+    if b.kind == "xla":
+        return {"kind": "xla"}
+    if b.kind == "pallas":
+        return {"kind": "pallas", "template": b.template,
+                "block": list(b.block) if b.block else None,
+                "mem_type": b.mem_type, "prefetch": bool(b.prefetch),
+                "interpret": bool(b.interpret),
+                "time_block": int(b.time_block)}
+    return None
+
+
+def _backend_from_json(d: dict):
+    if d["kind"] == "xla":
+        return st.xla()
+    return st.pallas(template=d["template"],
+                     block=tuple(d["block"]) if d["block"] else None,
+                     mem_type=d["mem_type"], prefetch=d["prefetch"],
+                     interpret=d["interpret"], time_block=d["time_block"])
+
+
+def _seconds_to_json(s: float):
+    return None if not np.isfinite(s) else float(s)
+
+
+def cache_dir_from_env() -> Optional[str]:
+    return os.environ.get(CACHE_ENV) or None
+
+
+def _disk_key(kernel, grids, iters, space, swap, steps, fuse_space,
+              time_block_space) -> Tuple[str, dict]:
+    """(digest, human-readable key dict) for one disk entry.
+
+    Geometry enters as the *shape bucket* (plus halo order and dtype), so
+    every request shape inside a bucket shares the tuned entry — the same
+    bucketing the serving layer packs waves by."""
+    g0 = next(iter(grids.values()))
+    readable = {
+        "schema": SCHEMA_VERSION,
+        "kernel": kernel.name,
+        "fingerprint": kernel_fingerprint(kernel),
+        "shape_bucket": list(shape_bucket(g0.shape)),
+        "geometry": sorted([n, g.order, str(np.dtype(g.dtype))]
+                           for n, g in grids.items()),
+        "iters": int(iters),
+        "space": repr(_space_key(space)),
+        "swap": list(swap) if swap else None,
+        "steps": int(steps) if swap else None,
+        "fuse_space": [int(f) for f in fuse_space] if swap else None,
+        "time_block_space":
+            [int(t) for t in time_block_space] if swap else None,
+        "jax_backend": jax.default_backend(),
+    }
+    blob = json.dumps(readable, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:24], readable
+
+
+def _disk_load(cdir: str, digest: str, readable: dict) -> Optional[TuneResult]:
+    path = os.path.join(cdir, f"tune-{digest}.json")
+    try:
+        with open(path) as f:
+            entry = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    if entry.get("schema") != SCHEMA_VERSION or entry.get("key") != readable:
+        return None  # schema bump or (hash-collision-safe) key mismatch
+    try:
+        trials = [(_backend_from_json(b), int(fs),
+                   float("inf") if s is None else float(s))
+                  for b, fs, s in entry["trials"]]
+        best = entry["best"]
+        return TuneResult(backend=_backend_from_json(best["backend"]),
+                          seconds=float("inf") if best["seconds"] is None
+                          else float(best["seconds"]),
+                          trials=trials, fuse_steps=int(best["fuse_steps"]))
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
+def _disk_store(cdir: str, digest: str, readable: dict,
+                result: TuneResult) -> None:
+    bjs = [(_backend_to_json(b), f, s) for b, f, s in result.trials]
+    if any(b is None for b, _, _ in bjs) \
+            or _backend_to_json(result.backend) is None:
+        return  # non-serializable backend in the space (e.g. distributed)
+    entry = {
+        "schema": SCHEMA_VERSION,
+        "key": readable,
+        "best": {"backend": _backend_to_json(result.backend),
+                 "fuse_steps": int(result.fuse_steps),
+                 "seconds": _seconds_to_json(result.seconds)},
+        "trials": [[b, int(f), _seconds_to_json(s)] for b, f, s in bjs],
+    }
+    os.makedirs(cdir, exist_ok=True)
+    # checkpoint.py's tmp-then-rename idiom: readers never see torn writes
+    fd, tmp = tempfile.mkstemp(dir=cdir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(entry, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(cdir, f"tune-{digest}.json"))
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+
+def clear_disk_cache(cdir: Optional[str] = None) -> int:
+    """Remove all on-disk entries in ``cdir`` (default: the env-var
+    directory).  Returns the number of entries removed."""
+    cdir = cdir or cache_dir_from_env()
+    if not cdir or not os.path.isdir(cdir):
+        return 0
+    n = 0
+    for name in os.listdir(cdir):
+        if name.startswith("tune-") and name.endswith(".json"):
+            try:
+                os.unlink(os.path.join(cdir, name))
+                n += 1
+            except OSError:
+                pass
+    return n
 
 
 def default_space(ndim: int, interior: Sequence[int]) -> List[st.Backend]:
@@ -192,7 +369,8 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
          swap: Optional[Tuple[str, str]] = None,
          steps: int = 16,
          fuse_space: Sequence[int] = (1, 4, 16),
-         time_block_space: Sequence[int] = (1, 2, 4)) -> TuneResult:
+         time_block_space: Sequence[int] = (1, 2, 4),
+         cache_dir: Optional[str] = None) -> TuneResult:
     """Grid-search the backend (and, with ``swap``, the fusion window).
 
     ``space`` entries may be plain backends or ``(backend, fuse_steps)``
@@ -201,6 +379,12 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     and searches ``fuse_space`` window sizes for each backend, plus
     ``time_block_space`` in-kernel temporal depths for pallas backends
     (the winner's depth is carried on ``result.backend.time_block``).
+
+    ``cache_dir`` (or ``$REPRO_AUTOTUNE_CACHE``) enables the persistent
+    on-disk cache: a miss in the in-process layer consults the disk entry
+    for this (kernel fingerprint, shape bucket, configuration) before
+    measuring anything, and a fresh measurement is written back
+    atomically.  Disk hits leave ``MEASURE_COUNT`` untouched.
     """
     g0 = next(iter(grids.values()))
     key = (kernel.name,
@@ -213,6 +397,15 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
            tuple(int(t) for t in time_block_space) if swap else None)
     if key in _CACHE:
         return _CACHE[key]
+    cdir = cache_dir or cache_dir_from_env()
+    digest = readable = None
+    if cdir:
+        digest, readable = _disk_key(kernel, grids, iters, space, swap,
+                                     steps, fuse_space, time_block_space)
+        result = _disk_load(cdir, digest, readable)
+        if result is not None:
+            _CACHE[key] = result
+            return result
     cands = _normalize_space(space, kernel.info.ndim, g0.shape, swap,
                              steps, fuse_space,
                              time_block_space if swap else (1,))
@@ -223,6 +416,7 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
         else:
             dt = _measure_timeloop(kernel, grids, backend, fuse, steps,
                                    swap, iters)
+        MEASURE_COUNT["measured_candidates"] += 1
         trials.append((backend, fuse, dt))
         if verbose:
             print(f"  {backend} fuse={fuse}: {dt:.4f}s", flush=True)
@@ -230,4 +424,6 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     result = TuneResult(backend=best[0], seconds=best[2], trials=trials,
                         fuse_steps=best[1])
     _CACHE[key] = result
+    if cdir:
+        _disk_store(cdir, digest, readable, result)
     return result

@@ -75,14 +75,23 @@ i64 = _DType("i64", jnp.int64)
 class grid:
     """A stencil data grid: ``shape`` interior points + ``order`` halo cells
     on each side of every axis (paper §2.1).  Also used as the kernel
-    parameter type annotation (``u: st.grid``)."""
+    parameter type annotation (``u: st.grid``).
+
+    ``batch=B`` adds a leading *scenario* axis: the grid holds B independent
+    copies of the (halo-padded) domain, advanced together by
+    ``st.timeloop(..., batch=B)`` in one compiled program.  The scenario
+    axis carries no halo."""
 
     def __init__(self, dtype: _DType = f32, shape: Tuple[int, ...] = (),
-                 order: int = 0, data: Optional[jnp.ndarray] = None):
+                 order: int = 0, data: Optional[jnp.ndarray] = None,
+                 batch: Optional[int] = None):
         self.shape = tuple(shape)
         self.order = int(order)
+        self.batch = int(batch) if batch else None
         self.dtype = dtype.dtype if isinstance(dtype, _DType) else dtype
         full = tuple(s + 2 * self.order for s in self.shape)
+        if self.batch:
+            full = (self.batch,) + full
         if data is not None:
             assert tuple(data.shape) == full, (data.shape, full)
             self.data = jnp.asarray(data, self.dtype)
@@ -95,32 +104,39 @@ class grid:
         return (self.order,) * len(self.shape)
 
     @property
-    def interior(self) -> jnp.ndarray:
+    def _interior_idx(self):
         o = self.order
         idx = tuple(slice(o, o + s) for s in self.shape)
-        return self.data[idx]
+        return ((slice(None),) + idx) if self.batch else idx
+
+    @property
+    def interior(self) -> jnp.ndarray:
+        return self.data[self._interior_idx]
 
     @interior.setter
     def interior(self, value) -> None:
-        o = self.order
-        idx = tuple(slice(o, o + s) for s in self.shape)
-        self.data = self.data.at[idx].set(jnp.asarray(value, self.dtype))
+        self.data = self.data.at[self._interior_idx].set(
+            jnp.asarray(value, self.dtype))
 
     # -- init helpers --------------------------------------------------------
     def randomize(self, seed: int = 0, scale: float = 1.0) -> "grid":
         rng = np.random.default_rng(seed)
-        vals = scale * rng.standard_normal(self.shape)
+        shape = ((self.batch,) + self.shape) if self.batch else self.shape
+        vals = scale * rng.standard_normal(shape)
         self.interior = np.asarray(vals, dtype=np.dtype(self.dtype))
         return self
 
     def copy(self) -> "grid":
         g = grid.__new__(grid)
         g.shape, g.order, g.dtype = self.shape, self.order, self.dtype
+        g.batch = self.batch
         g.data = self.data
         return g
 
     def __repr__(self):
-        return f"st.grid(shape={self.shape}, order={self.order}, dtype={self.dtype})"
+        b = f", batch={self.batch}" if self.batch else ""
+        return (f"st.grid(shape={self.shape}, order={self.order}, "
+                f"dtype={self.dtype}{b})")
 
 
 # --------------------------------------------------------------------------
@@ -308,11 +324,19 @@ def _bind_args(k: Kernel, args):
     for g in grids.values():
         if g.shape != interior:
             raise ValueError("all grids in one map must share interior shape")
+    batches = {g.batch for g in grids.values()}
+    if len(batches) > 1:
+        raise ValueError(
+            f"all grids must share the scenario batch dimension "
+            f"(got {sorted(b or 0 for b in batches)})")
     return grids, scalars
 
 
 def _apply_kernel(k: Kernel, args, begin, end):
     grids, scalars = _bind_args(k, args)
+    if next(iter(grids.values())).batch:
+        raise ValueError("st.map does not support batched grids; use "
+                         "st.timeloop(..., batch=B)")
     interior = next(iter(grids.values())).shape
 
     region = None
@@ -357,11 +381,13 @@ class TimeloopResult:
 
 
 class _TimeloopCall:
-    def __init__(self, steps: int, swap=None, fuse_steps=None, between=None):
+    def __init__(self, steps: int, swap=None, fuse_steps=None, between=None,
+                 batch: int = 0):
         self.steps = int(steps)
         self.swap = tuple(swap) if swap is not None else None
         self.fuse_steps = fuse_steps
         self.between = between
+        self.batch = int(batch)
 
     def __call__(self, k: Kernel):
         def apply(*args) -> TimeloopResult:
@@ -370,7 +396,7 @@ class _TimeloopCall:
 
 
 def timeloop(steps: int, swap=None, fuse_steps: Optional[int] = None,
-             between=None) -> _TimeloopCall:
+             between=None, batch: int = 0) -> _TimeloopCall:
     """Fused time stepping: ``steps`` applications of the kernel plus the
     leapfrog buffer swap, traced once and executed inside a single compiled
     program per fusion window (paper-style time-to-solution execution;
@@ -387,9 +413,15 @@ def timeloop(steps: int, swap=None, fuse_steps: Optional[int] = None,
     whole loop, or the enclosing ``st.launch(..., fuse_steps=K)`` value.
     Equivalent to the per-step ``st.map`` loop up to float-accumulation
     order (identical when fuse_steps=1).
+
+    ``batch=B`` advances B independent scenarios (grids built with
+    ``st.grid(..., batch=B)``, scalar params passed as floats or ``(B,)``
+    arrays) in one compiled program — the per-step kernel is vmapped over
+    the leading scenario axis inside the fused loop.  Defaults to the
+    grids' own batch dimension when they carry one.
     """
     return _TimeloopCall(steps, swap=swap, fuse_steps=fuse_steps,
-                         between=between)
+                         between=between, batch=batch)
 
 
 def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
@@ -397,6 +429,16 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
 
     grids, scalars = _bind_args(k, args)
     interior = next(iter(grids.values())).shape
+    grid_batch = next(iter(grids.values())).batch or 0
+    if call.batch and grid_batch and call.batch != grid_batch:
+        raise ValueError(
+            f"st.timeloop(batch={call.batch}) but grids carry "
+            f"batch={grid_batch}")
+    if call.batch and not grid_batch:
+        raise ValueError(
+            f"st.timeloop(batch={call.batch}) requires grids built with "
+            f"st.grid(..., batch={call.batch})")
+    batch = call.batch or grid_batch
     backend = _CTX.backend if _CTX.active else xla()
     mesh = _CTX.mesh if _CTX.active else None
     tb = _CTX.time_block if _CTX.active else None
@@ -426,14 +468,14 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
     key = ("timeloop", backend.cache_key(),
            tuple(sorted((n, g.shape, g.order, str(g.dtype))
                         for n, g in grids.items())),
-           swap, id(mesh) if mesh is not None else None)
+           swap, id(mesh) if mesh is not None else None, batch)
     engine = k._cache.get(key)
     if engine is None:
         t0 = time.perf_counter()
         halos = {n: g.halo for n, g in grids.items()}
         engine = _tl.TimeloopEngine(
             k.ir, halos, interior, backend, swap=swap, mesh=mesh,
-            profile_cb=_CTX.add if _CTX.active else None)
+            profile_cb=_CTX.add if _CTX.active else None, batch=batch)
         _CTX.add("codegen", time.perf_counter() - t0)
         k._cache[key] = engine
     # clamp the window to the loop length and the distributed overlapped-

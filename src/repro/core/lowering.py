@@ -155,3 +155,72 @@ def lower_jax_window(kernel: ir.StencilIR,
         return lax.fori_loop(0, steps, body, dict(arrays))
 
     return window
+
+
+def lower_jax_window_masked(kernel: ir.StencilIR,
+                            halos: Mapping[str, Tuple[int, ...]],
+                            interior_shape: Tuple[int, ...],
+                            swap: Optional[Tuple[str, str]],
+                            steps: int):
+    """Masked fused window for shape-bucketed serving: the step update is
+    confined to a ``mask``-selected sub-domain and to scenarios whose step
+    budget has not run out.
+
+    Semantics (exact, not approximate):
+
+      * **spatial** — interior cells where ``mask`` is False are *frozen*:
+        they keep each buffer's original value forever and behave exactly
+        like grid-halo cells.  Embedding a smaller request (its own halo
+        values included) into a larger bucket grid therefore reproduces
+        the small-domain run bit-for-bit — taps only ever reach ``h`` deep
+        into the frozen region, where the request's own halo values live.
+      * **temporal** — the window runs ``steps`` applications, but a
+        scenario stops changing (buffer rotation included) once the global
+        step index ``start + i`` reaches its ``limit``.  A wave can thus
+        run to the longest request's step count while shorter requests
+        freeze at theirs, with no name-parity correction needed at unpack
+        time.
+
+    Returns ``fn(arrays, scalars, mask, start, limit) -> arrays`` where
+    ``mask`` is a bool array over the interior, ``start`` the global index
+    of the window's first step, and ``limit`` the scenario's step budget.
+    ``start`` is shared across a vmapped batch (in_axes=None); ``mask``
+    and ``limit`` are per-scenario.
+    """
+    step_fn = lower_jax(kernel, halos, interior_shape, None)
+    written = kernel.output_grids()
+    ndim = kernel.ndim
+
+    def interior_idx(g):
+        h = halos[g]
+        return tuple(slice(h[ax], h[ax] + interior_shape[ax])
+                     for ax in range(ndim))
+
+    def window(arrays: Dict[str, jnp.ndarray],
+               scalars: Mapping[str, jnp.ndarray],
+               mask: jnp.ndarray,
+               start: jnp.ndarray,
+               limit: jnp.ndarray):
+        def body(i, arrs):
+            out = dict(step_fn(arrs, scalars))
+            act = (start + i) < limit
+            # spatial freeze in *buffer* space (before rotation), so frozen
+            # cells travel with their buffers exactly like halo cells do
+            for g in written:
+                idx = interior_idx(g)
+                out[g] = arrs[g].at[idx].set(
+                    jnp.where(mask, out[g][idx], arrs[g][idx]))
+            if swap is not None:
+                w, o = swap
+                # per-scenario rotation: a frozen scenario keeps both
+                # buffers (no rotation), an active one trades them
+                new_w = jnp.where(act, arrs[o], arrs[w])
+                new_o = jnp.where(act, out[w], arrs[o])
+                out[w], out[o] = new_w, new_o
+            else:
+                for g in written:
+                    out[g] = jnp.where(act, out[g], arrs[g])
+            return out
+        return lax.fori_loop(0, steps, body, dict(arrays))
+
+    return window

@@ -138,7 +138,16 @@ def make_grids(name: str, shape: Tuple[int, ...] = None,
     setup for the time-loop benchmarks and the autotuner."""
     k = get_kernel(name)
     if shape is None:
-        shape = (64, 64) if k.info.ndim == 2 else (16, 16, 32)
+        if k.info.ndim == 2:
+            shape = (64, 64)
+        elif k.info.order <= 2:
+            shape = (16, 16, 32)
+        else:
+            # high-order 3D kernels (e.g. the paper's 25-point star3d4r)
+            # need extents that admit in-kernel temporal blocking up to
+            # k=4: the k·h expanded halo (16 cells at order 4) must fit
+            # the block on every axis
+            shape = (32, 32, 64)
     return {g: st.grid(dtype=st.f32, shape=shape,
                        order=k.info.order).randomize(seed + i)
             for i, g in enumerate(k.ir.grid_params)}

@@ -38,6 +38,19 @@ that fusion for all three backends:
 The host syncs only at fusion-window boundaries; an optional ``between``
 hook runs there (e.g. acoustic source injection).
 
+With ``batch=B`` the engine carries a leading *scenario* dimension: one
+compiled program advances B independent grid-sets (distinct initial
+conditions, coefficient grids, and scalar parameters) per step.  The
+per-window program is ``jax.vmap``-ped over the leading axis — on the
+pallas path XLA's batching rule turns the scenario axis into an extra
+leading grid dimension of the same ``pallas_call`` (the batched operand
+layout), so the kernel stage stays one program.  Scalars may be python
+floats (broadcast) or ``(B,)`` arrays (per-scenario).  The batched xla
+path additionally supports *masked* windows for shape-bucketed serving
+(``lowering.lower_jax_window_masked``): a per-scenario spatial mask
+freezes cells outside a request's true sub-domain and a per-scenario
+step budget freezes finished scenarios, both exactly.
+
 This module is DSL-agnostic: it works on dicts of jnp arrays.  The user
 API is ``st.timeloop(...)`` / ``st.launch(..., fuse_steps=K)`` in
 ``core/dsl.py``; the array-level wrapper is
@@ -157,15 +170,24 @@ class TimeloopEngine:
                  backend,
                  swap: Optional[Tuple[str, str]] = None,
                  mesh=None,
-                 profile_cb: Optional[Callable[[str, float], None]] = None):
+                 profile_cb: Optional[Callable[[str, float], None]] = None,
+                 batch: int = 0):
         self.kernel = kernel
         self.halos = {g: tuple(h) for g, h in halos.items()}
         self.interior = tuple(interior_shape)
         self.backend = backend
         self.swap = normalize_swap(kernel, swap)
         self.mesh = mesh
+        self.batch = int(batch)
+        if self.batch < 0:
+            raise ValueError("batch must be >= 0 (0 = unbatched)")
+        if self.batch and backend.kind == "distributed":
+            raise ValueError(
+                "batched timeloop does not support the distributed backend "
+                "(the scenario axis and the mesh decomposition would fight "
+                "over the leading dimensions)")
         self._profile_cb = profile_cb
-        self._windows: Dict[int, Callable] = {}
+        self._windows: Dict[Tuple[int, bool], Callable] = {}
         self._plan = self._plan1 = None
         self.time_block = 1
         if backend.kind == "pallas":
@@ -212,16 +234,30 @@ class TimeloopEngine:
         if self._profile_cb is not None:
             self._profile_cb(phase, dt)
 
-    def _window(self, kw: int) -> Callable:
-        """Compiled fused program for a window of ``kw`` steps."""
-        fn = self._windows.get(kw)
+    def _window(self, kw: int, masked: bool = False) -> Callable:
+        """Compiled fused program for a window of ``kw`` steps.
+
+        ``masked=True`` (batched xla only) selects the serving variant with
+        per-scenario spatial masks and step budgets."""
+        fn = self._windows.get((kw, masked))
         if fn is not None:
             return fn
         t0 = time.perf_counter()
         donate = (0,) if _donate_ok() else ()
-        if self.backend.kind == "xla":
+        if masked:
+            if self.backend.kind != "xla" or not self.batch:
+                raise ValueError(
+                    "masked windows require a batched xla timeloop")
+            win = lowering.lower_jax_window_masked(
+                self.kernel, self.halos, self.interior, self.swap, kw)
+            # mask and limit are per-scenario; start is window-global
+            fn = jax.jit(jax.vmap(win, in_axes=(0, 0, 0, None, 0)),
+                         donate_argnums=donate)
+        elif self.backend.kind == "xla":
             win = lowering.lower_jax_window(
                 self.kernel, self.halos, self.interior, None, self.swap, kw)
+            if self.batch:
+                win = jax.vmap(win, in_axes=(0, 0))
             fn = jax.jit(win, donate_argnums=donate)
         elif self.backend.kind == "pallas":
             plan, plan1, swap = self._plan, self._plan1, self.swap
@@ -262,6 +298,11 @@ class TimeloopEngine:
                 if r:
                     p = lax.fori_loop(0, r, body_1, p)
                 return p
+            if self.batch:
+                # XLA's batching rule lifts the scenario axis into an extra
+                # leading grid dimension of the same pallas_call — one
+                # program still advances all B scenarios per invocation
+                win = jax.vmap(win, in_axes=(0, 0))
             fn = jax.jit(win, donate_argnums=donate)
         else:  # distributed
             from . import distributed as _dist
@@ -290,7 +331,7 @@ class TimeloopEngine:
             fn = _dist.lower_distributed(self.kernel, self.halos,
                                          self.interior, None, be, self.mesh)
         self._add("comp", time.perf_counter() - t0)
-        self._windows[kw] = fn
+        self._windows[(kw, masked)] = fn
         return fn
 
     def window_for(self, steps: int, fuse_steps: Optional[int] = None) -> int:
@@ -304,15 +345,58 @@ class TimeloopEngine:
             scalars: Mapping[str, jnp.ndarray],
             steps: int,
             fuse_steps: Optional[int] = None,
-            between: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
+            between: Optional[Callable] = None,
+            *,
+            domain_mask: Optional[jnp.ndarray] = None,
+            step_limits=None) -> Dict[str, jnp.ndarray]:
         fuse = self.window_for(steps, fuse_steps)
-        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
         arrays = dict(arrays)
+        if self.batch:
+            for g, a in arrays.items():
+                if a.ndim != len(self.interior) + 1 \
+                        or a.shape[0] != self.batch:
+                    raise ValueError(
+                        f"batched timeloop: grid '{g}' must carry a leading "
+                        f"scenario axis of {self.batch} (got {a.shape})")
+            # python floats broadcast; (B,) arrays stay per-scenario
+            scal = {n: jnp.broadcast_to(jnp.asarray(v, jnp.float32),
+                                        (self.batch,))
+                    for n, v in scalars.items()}
+        else:
+            scal = {n: jnp.asarray(v, jnp.float32)
+                    for n, v in scalars.items()}
+        masked = domain_mask is not None or step_limits is not None
+        mask = limits = None
+        if masked:
+            if not self.batch or self.backend.kind != "xla":
+                raise ValueError(
+                    "domain_mask / step_limits require a batched xla "
+                    "timeloop (the serving path)")
+            if domain_mask is None:
+                mask = jnp.ones((self.batch,) + self.interior, bool)
+            else:
+                mask = jnp.asarray(domain_mask, bool)
+                if mask.shape != (self.batch,) + self.interior:
+                    raise ValueError(
+                        f"domain_mask must have shape "
+                        f"{(self.batch,) + self.interior} (got {mask.shape})")
+            if step_limits is None:
+                limits = jnp.full((self.batch,), steps, jnp.int32)
+            else:
+                limits = jnp.asarray(step_limits, jnp.int32)
+                if limits.shape != (self.batch,):
+                    raise ValueError(
+                        f"step_limits must have shape ({self.batch},) "
+                        f"(got {limits.shape})")
         t = 0
         while t < steps:
             kw = min(fuse, steps - t)
             t0 = time.perf_counter()
-            arrays = self._run_window(arrays, scal, kw)
+            if masked:
+                arrays = self._window(kw, masked=True)(
+                    arrays, scal, mask, jnp.int32(t), limits)
+            else:
+                arrays = self._run_window(arrays, scal, kw)
             jax.block_until_ready(arrays)
             self._add("kernel", time.perf_counter() - t0)
             t += kw
@@ -326,15 +410,22 @@ class TimeloopEngine:
         if self.backend.kind == "pallas":
             plan = self._plan
             t0 = time.perf_counter()
-            padded = plan.to_padded(arrays)         # ONE pad/grid/window
+            if self.batch:
+                # vmapped layout stage: still ONE pad per grid per window
+                # (eager vmap pads all B scenarios in a single batched op)
+                padded = jax.vmap(plan.to_padded)(arrays)
+            else:
+                padded = plan.to_padded(arrays)     # ONE pad/grid/window
             self._add("layout", time.perf_counter() - t0)
-            plan.count_window(kw)                   # modeled HBM traffic
+            plan.count_window(kw, batch=max(1, self.batch))  # modeled HBM
             padded = self._window(kw)(padded, scal)
             # the device program rotated padded buffers kw times; apply the
             # same parity to the full host arrays so halos travel with
             # their buffers, then write the padded interiors back
             if self.swap and kw % 2:
                 arrays = _rotate(arrays, self.swap)
+            if self.batch:
+                return jax.vmap(plan.from_padded)(padded, arrays)
             return plan.from_padded(padded, arrays)
         # distributed: the k-step (time-skewed for kw>1) program does its
         # own internal rotation for kw>1; rotate host-side for kw==1.
@@ -360,8 +451,9 @@ def run_timeloop(kernel: _ir.StencilIR,
                  swap: Optional[Tuple[str, str]] = None,
                  fuse_steps: Optional[int] = None,
                  between: Optional[Callable] = None,
-                 mesh=None) -> Dict[str, jnp.ndarray]:
+                 mesh=None,
+                 batch: int = 0) -> Dict[str, jnp.ndarray]:
     """One-shot convenience wrapper (builds a fresh engine)."""
     eng = TimeloopEngine(kernel, halos, interior_shape, backend,
-                         swap=swap, mesh=mesh)
+                         swap=swap, mesh=mesh, batch=batch)
     return eng.run(dict(arrays), scalars, steps, fuse_steps, between)

@@ -1024,19 +1024,23 @@ class PallasPlan:
         write = len(self.step_out_grids) * math.prod(self.B)
         return nblocks * (read + write) * itemsize / self.time_block
 
-    def count_window(self, steps: int) -> None:
+    def count_window(self, steps: int, batch: int = 1) -> None:
         """Accumulate modeled traffic for a fused window of ``steps`` time
         steps into ``TRAFFIC_COUNT`` (windows of ``time_block`` plus a
         remainder of single steps, mirroring the engine's decomposition).
         Remainder steps run through the single-step plan, which aliases in
-        place and fetches no destination blocks."""
+        place and fetches no destination blocks.  With ``batch=B`` (the
+        vmapped scenario axis — an extra leading grid dimension of the same
+        ``pallas_call``) every grid's traffic scales by B; modeled ``steps``
+        stay per-scenario time steps."""
         k = self.time_block
         m, r = divmod(int(steps), k)
-        TRAFFIC_COUNT["grid_reads"] += (
+        b = max(1, int(batch))
+        TRAFFIC_COUNT["grid_reads"] += b * (
             m * (len(self.opnd_grids) + self._dest_fetches)
             + r * len(self.opnd_grids))
-        TRAFFIC_COUNT["grid_writes"] += (m * len(self.step_out_grids)
-                                         + r * len(self.out_grids))
+        TRAFFIC_COUNT["grid_writes"] += b * (m * len(self.step_out_grids)
+                                             + r * len(self.out_grids))
         TRAFFIC_COUNT["steps"] += int(steps)
 
     # -- layout stage ------------------------------------------------------

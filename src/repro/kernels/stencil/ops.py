@@ -58,7 +58,8 @@ def stencil_timeloop(kernel: "st.Kernel",
                      mem_type: Optional[str] = None,
                      interpret: bool = True,
                      fuse_steps: Optional[int] = None,
-                     time_block: int = 1) -> Dict[str, jnp.ndarray]:
+                     time_block: int = 1,
+                     batch: int = 0) -> Dict[str, jnp.ndarray]:
     """Fused time stepping on raw halo-padded arrays (the array-level twin
     of ``st.timeloop``): ``steps`` applications + leapfrog rotation of the
     ``swap`` pair, executed on the persistent block-padded layout with one
@@ -67,7 +68,8 @@ def stencil_timeloop(kernel: "st.Kernel",
     expanded k·h halos (in-kernel temporal blocking).  Returns the final
     arrays under the name-rotation convention (the newest field ends up
     under the *read* grid's name after each swap, exactly like a
-    ``(u.data, v.data) = (v.data, u.data)`` loop).
+    ``(u.data, v.data) = (v.data, u.data)`` loop).  ``batch=B`` advances B
+    scenarios (arrays carry a leading scenario axis) in one program.
     """
     from repro.core import timeloop as _tl
 
@@ -76,10 +78,11 @@ def stencil_timeloop(kernel: "st.Kernel",
         h = kernel.info.halo
         halos = {g: h for g in k_ir.grid_params}
     g0 = k_ir.grid_params[0]
-    interior = tuple(s - 2 * hh for s, hh in zip(arrays[g0].shape, halos[g0]))
+    spatial = arrays[g0].shape[1:] if batch else arrays[g0].shape
+    interior = tuple(s - 2 * hh for s, hh in zip(spatial, halos[g0]))
     backend = st.pallas(template=template, block=block, mem_type=mem_type,
                         interpret=interpret, time_block=time_block)
     return _tl.run_timeloop(k_ir, dict(arrays), dict(scalars or {}), steps,
                             halos=dict(halos), interior_shape=interior,
                             backend=backend, swap=swap,
-                            fuse_steps=fuse_steps)
+                            fuse_steps=fuse_steps, batch=batch)

@@ -44,8 +44,12 @@ def main(argv=None):
     done = server.run_until_drained()
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.result) for r in done.values())
+    lat = np.array([r.done_at - r.submitted_at for r in done.values()])
     print(f"served {len(done)} requests, {n_tok} new tokens "
           f"in {dt:.1f}s ({n_tok / dt:.1f} tok/s)")
+    print(f"request latency: p50 {np.percentile(lat, 50):.3f}s  "
+          f"p99 {np.percentile(lat, 99):.3f}s  "
+          f"max {lat.max():.3f}s")
     for uid, r in sorted(done.items())[:4]:
         print(f"  req {uid}: {r.result[:8]}...")
     return done

@@ -1,2 +1,3 @@
-"""Serving substrate: KV caches (full / rolling-window / recurrent state)
-and the batched decode loop."""
+"""Serving substrate: KV caches (full / rolling-window / recurrent state),
+the batched LM decode loop, and the shape-bucketed stencil simulation
+server (``stencil_serve.SimServer``)."""

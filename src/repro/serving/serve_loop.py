@@ -64,10 +64,15 @@ class Generator:
         return api.init_cache(self.cfg, batch, cache_len, **kw)
 
     def generate(self, prompts: np.ndarray,
-                 frame_embeds: Optional[np.ndarray] = None) -> np.ndarray:
+                 frame_embeds: Optional[np.ndarray] = None,
+                 max_new: Optional[int] = None) -> np.ndarray:
         """prompts: [B, S] int32 → [B, S + max_new] (greedy when
-        temperature == 0)."""
+        temperature == 0).  ``max_new`` overrides the config's
+        ``max_new_tokens`` per call (the batch server varies it per wave
+        without rebuilding the generator)."""
         cfg, gen = self.cfg, self.gen
+        if max_new is not None:
+            gen = dataclasses.replace(gen, max_new_tokens=int(max_new))
         B, S = prompts.shape
         ctx = S + gen.max_new_tokens
         cache = self._init_cache(B, ctx)
@@ -112,7 +117,12 @@ class BatchServer:
     """Wave-scheduling batch server.
 
     Pending requests are grouped into waves of ``batch_size``; each wave is
-    left-padded to the wave's max prompt length and generated together.
+    left-padded and generated together.  To keep XLA from recompiling the
+    decode step on every wave, each wave's context length
+    (``S + max_new_tokens``) is bucketed up to the next power of two and
+    the batch is padded to the full ``batch_size`` with dummy slots — so
+    all waves whose context falls in one bucket share a single compiled
+    step (see ``test_batch_server_single_compile``).
     (A shared scalar cache position keeps the step fully static — the
     continuous-batching upgrade is per-slot positions, noted in DESIGN.md.)
     """
@@ -140,16 +150,19 @@ class BatchServer:
         wave = self.queue[:self.batch_size]
         self.queue = self.queue[self.batch_size:]
         S = max(len(r.prompt) for r in wave)
-        B = len(wave)
-        toks = np.zeros((B, S), np.int32)
+        mx = max(r.max_new_tokens for r in wave)
+        # bucket the context (prompt + generation) to the next power of
+        # two and pad the batch to ``batch_size`` — the decode step's
+        # (B, cache_len) signature is then wave-invariant per bucket
+        ctx = 1 << max(1, (S + mx - 1).bit_length())
+        Sb = ctx - mx
+        toks = np.zeros((self.batch_size, Sb), np.int32)
         for i, r in enumerate(wave):
-            toks[i, S - len(r.prompt):] = r.prompt      # left padding
-        gen = dataclasses.replace(
-            self.gen, max_new_tokens=max(r.max_new_tokens for r in wave))
-        out = self._generator.generate(toks)
+            toks[i, Sb - len(r.prompt):] = r.prompt     # left padding
+        out = self._generator.generate(toks, max_new=mx)
         finished = []
         for i, r in enumerate(wave):
-            r.result = out[i, S:S + r.max_new_tokens]
+            r.result = out[i, Sb:Sb + r.max_new_tokens]
             r.done_at = time.time()
             self.done[r.uid] = r
             finished.append(r.uid)

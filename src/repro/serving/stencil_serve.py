@@ -1,0 +1,319 @@
+"""Simulation-as-a-service: shape-bucketed continuous batching for stencil
+jobs (the Devito-style traffic shape — many small/medium simulations from
+many users, not one giant run).
+
+A ``SimServer`` accepts (kernel-name, shape, steps, payload) requests and
+serves them from a small set of compiled programs:
+
+  1. **bucket** — requests group by ``(kernel, shape-bucket, dtype)``,
+     where the bucket rounds every interior extent up to a power of two
+     (``autotune.shape_bucket`` — the same bucketing the persistent
+     autotune cache keys on).
+  2. **pack** — up to ``batch_cap`` requests embed into one batched
+     grid-set at the bucket shape.  A request's cells land at the corner
+     of the bucket domain; everything outside its true sub-domain is
+     *frozen* by a per-scenario spatial mask (exactly like halo cells, so
+     the embedded run is bit-for-bit the small-domain run).  Waves
+     shorter than the cap are padded with dummy scenarios (mask all-False,
+     step budget 0) so every wave runs the same compiled program.
+  3. **run** — one batched masked timeloop advances the whole wave.  The
+     wave runs to the longest request's step count, rounded up to a
+     multiple of the fuse window; each request freezes at its own budget
+     via per-scenario step limits (``lowering.lower_jax_window_masked``).
+  4. **unpack** — each request's true sub-domain is sliced back out.
+
+Admission (``bucket_key``), packing (``pack_wave``) and unpacking
+(``unpack_wave``) are pure functions; the server is a thin queue around
+them.  Masked windows exist on the batched xla path only, so the server
+always runs ``st.xla()`` engines — the pallas fused path would need a mask
+operand threaded through the generated kernel (future work).
+
+With ``autotune_cache=<dir>`` the server consults the persistent autotune
+cache once per bucket to pick the fuse window (measuring only on a cold
+cache; a warm process serves its first request with zero re-measured
+candidates — see ``benchmarks/serve.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune as _at
+from repro.core import dsl as st
+from repro.core import suite as _suite
+from repro.core import timeloop as _tl
+
+__all__ = ["SimRequest", "SimServer", "bucket_key", "pack_wave",
+           "unpack_wave", "form_waves", "default_swap"]
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One simulation job.
+
+    ``payload`` maps grid-param name → numpy array, either the bare
+    interior (``shape``) or the full halo-padded field
+    (``shape + 2·order`` per axis) when the job carries boundary values.
+    ``scalars`` are per-request kernel scalar parameters.  ``result``
+    (set when served) maps grid name → interior array at the true shape,
+    under the engine's name-rotation convention."""
+    uid: int
+    kernel: str
+    shape: Tuple[int, ...]
+    steps: int
+    payload: Dict[str, np.ndarray]
+    scalars: Dict[str, float] = dataclasses.field(default_factory=dict)
+    dtype: str = "float32"
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+    result: Optional[Dict[str, np.ndarray]] = None
+
+
+# --------------------------------------------------------------------------
+# pure admission / packing / unpacking
+# --------------------------------------------------------------------------
+def bucket_key(kernel: str, shape: Sequence[int],
+               dtype: str = "float32") -> Tuple[str, Tuple[int, ...], str]:
+    """(kernel, padded-shape-bucket, dtype): requests sharing a key share
+    one compiled batched program."""
+    return (kernel, _at.shape_bucket(shape), str(np.dtype(dtype)))
+
+
+def default_swap(k: st.Kernel) -> Optional[Tuple[str, str]]:
+    """Leapfrog pair for serving: the kernel's (written, first-read) grids
+    when it has exactly two grid params (every suite kernel), else None —
+    multi-operand kernels must pass their pair explicitly."""
+    if len(k.ir.grid_params) != 2:
+        return None
+    out = k.ir.output_grids()[0]
+    other = next(g for g in k.ir.grid_params if g != out)
+    return (out, other)
+
+
+def pack_wave(k: st.Kernel, bucket: Tuple[int, ...],
+              requests: Sequence[SimRequest], batch_cap: int,
+              dtype="float32"):
+    """Embed ≤ ``batch_cap`` requests into one batched grid-set.
+
+    Returns ``(arrays, mask, limits)``: halo-padded ``(cap,)+bucket``
+    arrays per grid, the per-scenario bool mask over the bucket interior,
+    and per-scenario step budgets.  Request ``i``'s field (halo included,
+    zero halos if the payload is interior-only) sits at the corner of the
+    bucket domain; slots past ``len(requests)`` are dummies (mask
+    all-False, budget 0) so partial waves reuse the full-cap program."""
+    if len(requests) > batch_cap:
+        raise ValueError(f"wave of {len(requests)} exceeds cap {batch_cap}")
+    order = k.info.order
+    ndim = k.info.ndim
+    full = tuple(b + 2 * order for b in bucket)
+    arrays = {g: np.zeros((batch_cap,) + full, dtype)
+              for g in k.ir.grid_params}
+    mask = np.zeros((batch_cap,) + tuple(bucket), bool)
+    limits = np.zeros((batch_cap,), np.int32)
+    for i, r in enumerate(requests):
+        s = tuple(r.shape)
+        if any(a > b for a, b in zip(s, bucket)):
+            raise ValueError(f"request shape {s} exceeds bucket {bucket}")
+        mask[i][tuple(slice(0, e) for e in s)] = True
+        limits[i] = int(r.steps)
+        sfull = tuple(e + 2 * order for e in s)
+        for g in k.ir.grid_params:
+            val = np.asarray(r.payload.get(g, 0.0))
+            if val.ndim == 0:
+                continue  # absent grid → zeros
+            if tuple(val.shape) == sfull:
+                idx = tuple(slice(0, e) for e in sfull)
+            elif tuple(val.shape) == s:
+                idx = tuple(slice(order, order + e) for e in s)
+            else:
+                raise ValueError(
+                    f"payload '{g}' must be shape {s} (interior) or "
+                    f"{sfull} (halo-padded); got {tuple(val.shape)}")
+            arrays[g][(i,) + idx] = val
+    return ({g: jnp.asarray(a) for g, a in arrays.items()},
+            jnp.asarray(mask), jnp.asarray(limits))
+
+
+def unpack_wave(k: st.Kernel, out_arrays: Mapping[str, jnp.ndarray],
+                requests: Sequence[SimRequest]) -> List[Dict[str, np.ndarray]]:
+    """Slice each request's true-shape interiors back out of the batched
+    bucket arrays (no parity correction needed: a scenario's buffers stop
+    rotating at its step budget, so names already follow the engine's
+    rotation convention at exactly ``steps`` steps)."""
+    order = k.info.order
+    out = []
+    for i, r in enumerate(requests):
+        idx = tuple(slice(order, order + e) for e in r.shape)
+        out.append({g: np.asarray(out_arrays[g][(i,) + idx])
+                    for g in k.ir.grid_params})
+    return out
+
+
+def form_waves(queue: Sequence[SimRequest],
+               batch_cap: int) -> List[List[SimRequest]]:
+    """Split one bucket's FIFO queue into waves of ≤ ``batch_cap``."""
+    return [list(queue[i:i + batch_cap])
+            for i in range(0, len(queue), batch_cap)]
+
+
+# --------------------------------------------------------------------------
+# server
+# --------------------------------------------------------------------------
+class SimServer:
+    """Continuous-batching front-end over the batched masked timeloop.
+
+    ``batch_cap`` scenarios per wave (compiled once per bucket);
+    ``deadline_s`` bounds how long a partially-filled wave may wait;
+    ``fuse_window`` is the host-sync cadence (wave step counts round up
+    to a multiple of it, so every wave reuses the same compiled window).
+    ``kernels`` maps extra kernel names to ``st.Kernel`` objects (suite
+    names resolve automatically); ``autotune_cache`` enables the
+    persistent autotune cache directory for per-bucket fuse-window tuning.
+    """
+
+    def __init__(self, batch_cap: int = 8, deadline_s: float = 0.05,
+                 fuse_window: int = 8,
+                 kernels: Optional[Mapping[str, st.Kernel]] = None,
+                 swaps: Optional[Mapping[str, Tuple[str, str]]] = None,
+                 autotune_cache: Optional[str] = None,
+                 tune_steps: int = 8,
+                 tune_fuse_space: Sequence[int] = (1, 4, 8)):
+        if batch_cap < 1:
+            raise ValueError("batch_cap must be >= 1")
+        self.batch_cap = int(batch_cap)
+        self.deadline_s = float(deadline_s)
+        self.fuse_window = int(fuse_window)
+        self._kernels = dict(kernels or {})
+        self._swaps = dict(swaps or {})
+        self.autotune_cache = autotune_cache
+        self.tune_steps = int(tune_steps)
+        self.tune_fuse_space = tuple(tune_fuse_space)
+        self._queues: Dict[Tuple, List[SimRequest]] = {}
+        self._engines: Dict[Tuple, Tuple[_tl.TimeloopEngine, int]] = {}
+        self._uid = itertools.count()
+        self.waves_run = 0
+
+    # -- kernel resolution -------------------------------------------------
+    def _kernel(self, name: str) -> st.Kernel:
+        k = self._kernels.get(name)
+        if k is None:
+            k = _suite.get_kernel(name)
+            self._kernels[name] = k
+        return k
+
+    def _swap(self, name: str) -> Optional[Tuple[str, str]]:
+        if name in self._swaps:
+            return self._swaps[name]
+        return default_swap(self._kernel(name))
+
+    # -- submission --------------------------------------------------------
+    def submit(self, kernel: str, shape: Sequence[int], steps: int,
+               payload: Mapping[str, np.ndarray],
+               scalars: Optional[Mapping[str, float]] = None,
+               dtype: str = "float32") -> int:
+        k = self._kernel(kernel)
+        shape = tuple(int(s) for s in shape)
+        if len(shape) != k.info.ndim:
+            raise ValueError(f"kernel '{kernel}' is {k.info.ndim}D; "
+                             f"got shape {shape}")
+        if int(steps) < 0:
+            raise ValueError("steps must be >= 0")
+        r = SimRequest(uid=next(self._uid), kernel=kernel, shape=shape,
+                       steps=int(steps), payload=dict(payload),
+                       scalars=dict(scalars or {}), dtype=str(np.dtype(dtype)),
+                       submitted_at=time.perf_counter())
+        self._queues.setdefault(bucket_key(kernel, shape, dtype), []) \
+            .append(r)
+        return r.uid
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    # -- engine / tuned window per bucket ----------------------------------
+    def _engine_for(self, key) -> Tuple[_tl.TimeloopEngine, int]:
+        entry = self._engines.get(key)
+        if entry is not None:
+            return entry
+        name, bucket, dtype = key
+        k = self._kernel(name)
+        swap = self._swap(name)
+        fuse = self.fuse_window
+        if self.autotune_cache and swap is not None:
+            # persistent-cache-backed fuse-window choice for this bucket:
+            # warm processes read the tuned window from disk and measure
+            # nothing (MEASURE_COUNT stays put)
+            grids = {g: st.grid(st.f32, bucket, k.info.order).randomize(i)
+                     for i, g in enumerate(k.ir.grid_params)}
+            res = _at.tune(k, grids, iters=1, space=[st.xla()], swap=swap,
+                           steps=self.tune_steps,
+                           fuse_space=self.tune_fuse_space,
+                           time_block_space=(1,),
+                           cache_dir=self.autotune_cache)
+            fuse = max(1, int(res.fuse_steps))
+        halos = {g: (k.info.order,) * k.info.ndim for g in k.ir.grid_params}
+        eng = _tl.TimeloopEngine(k.ir, halos, bucket, st.xla(), swap=swap,
+                                 batch=self.batch_cap)
+        self._engines[key] = (eng, fuse)
+        return eng, fuse
+
+    # -- serving loop ------------------------------------------------------
+    def _ready(self, key, now: float, force: bool) -> bool:
+        q = self._queues[key]
+        if not q:
+            return False
+        if force or len(q) >= self.batch_cap:
+            return True
+        return (now - q[0].submitted_at) >= self.deadline_s
+
+    def step(self, force: bool = False) -> List[SimRequest]:
+        """Run at most one wave: the oldest bucket that is ready (full to
+        the cap, past its deadline, or any with ``force``).  Returns the
+        completed requests (empty when nothing is ready)."""
+        now = time.perf_counter()
+        ready = [key for key in self._queues
+                 if self._ready(key, now, force)]
+        if not ready:
+            return []
+        key = min(ready, key=lambda k2: self._queues[k2][0].submitted_at)
+        q = self._queues[key]
+        wave, self._queues[key] = q[:self.batch_cap], q[self.batch_cap:]
+        return self._run_wave(key, wave)
+
+    def run_until_drained(self) -> Dict[int, SimRequest]:
+        """Serve everything queued (partial waves run immediately)."""
+        done: Dict[int, SimRequest] = {}
+        while self.pending():
+            for r in self.step(force=True):
+                done[r.uid] = r
+        return done
+
+    def _run_wave(self, key, wave: List[SimRequest]) -> List[SimRequest]:
+        name, bucket, _dtype = key
+        k = self._kernel(name)
+        eng, fuse = self._engine_for(key)
+        arrays, mask, limits = pack_wave(k, bucket, wave, self.batch_cap)
+        # every wave runs a whole number of identical fuse windows: steps
+        # round UP to a multiple of the window (per-scenario budgets stop
+        # each request at its own count), so one compiled program serves
+        # all step counts in the bucket
+        top = max([int(r.steps) for r in wave] + [1])
+        steps = -(-top // fuse) * fuse
+        scal_names = [n for n, _dt in k.ir.scalar_params]
+        scalars = {n: jnp.asarray([float(r.scalars.get(n, 0.0))
+                                   for r in wave]
+                                  + [0.0] * (self.batch_cap - len(wave)),
+                                  jnp.float32)
+                   for n in scal_names}
+        out = eng.run(arrays, scalars, steps, fuse,
+                      domain_mask=mask, step_limits=limits)
+        results = unpack_wave(k, out, wave)
+        now = time.perf_counter()
+        for r, res in zip(wave, results):
+            r.result, r.done_at = res, now
+        self.waves_run += 1
+        return wave

@@ -1,0 +1,133 @@
+"""Persistent autotune cache: disk round-trip, bucket sharing,
+invalidation, atomic-file hygiene, and the measured-candidate counter."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.core import autotune as at
+from repro.core import dsl as st, suite
+
+SPACE = [st.xla()]
+FUSE = (1, 4)
+
+
+def _tune(cdir, shape=(12, 18), name="star2d1r", space=SPACE, fuse=FUSE):
+    k = suite.get_kernel(name)
+    grids = {g: st.grid(st.f32, shape, k.info.order).randomize(i)
+             for i, g in enumerate(k.ir.grid_params)}
+    return at.tune(k, grids, iters=1, space=space,
+                   swap=suite.swap_pair(name), steps=4, fuse_space=fuse,
+                   time_block_space=(1,), cache_dir=str(cdir))
+
+
+def _measured():
+    return at.MEASURE_COUNT["measured_candidates"]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_counters():
+    at.clear_cache()
+    at.reset_measure_count()
+    yield
+    at.clear_cache()
+    at.reset_measure_count()
+
+
+def test_round_trip_warm_measures_nothing(tmp_path):
+    res = _tune(tmp_path)
+    assert _measured() == len(SPACE) * len(FUSE)
+    files = glob.glob(str(tmp_path / "tune-*.json"))
+    assert len(files) == 1
+    # simulate a new process: drop the in-memory layer
+    at.clear_cache()
+    at.reset_measure_count()
+    warm = _tune(tmp_path)
+    assert _measured() == 0
+    assert warm.fuse_steps == res.fuse_steps
+    assert warm.backend.kind == res.backend.kind
+    assert len(warm.trials) == len(res.trials)
+    # no stray tmp files from the atomic write
+    assert not glob.glob(str(tmp_path / "*.tmp"))
+
+
+def test_same_bucket_different_shape_hits(tmp_path):
+    _tune(tmp_path, shape=(12, 18))         # bucket (16, 32)
+    at.clear_cache()
+    at.reset_measure_count()
+    _tune(tmp_path, shape=(9, 17))          # same bucket
+    assert _measured() == 0
+    at.clear_cache()
+    at.reset_measure_count()
+    _tune(tmp_path, shape=(20, 20))         # bucket (32, 32) -> cold
+    assert _measured() == len(SPACE) * len(FUSE)
+
+
+def test_config_change_invalidates(tmp_path):
+    _tune(tmp_path)
+    at.clear_cache()
+    at.reset_measure_count()
+    _tune(tmp_path, fuse=(1, 2))            # different search space
+    assert _measured() > 0
+    at.clear_cache()
+    at.reset_measure_count()
+    _tune(tmp_path, name="star2d2r")        # different kernel fingerprint
+    assert _measured() > 0
+
+
+def test_schema_bump_invalidates(tmp_path):
+    _tune(tmp_path)
+    (path,) = glob.glob(str(tmp_path / "tune-*.json"))
+    with open(path) as f:
+        entry = json.load(f)
+    entry["schema"] = at.SCHEMA_VERSION + 1
+    entry["key"]["schema"] = at.SCHEMA_VERSION + 1
+    with open(path, "w") as f:
+        json.dump(entry, f)
+    at.clear_cache()
+    at.reset_measure_count()
+    _tune(tmp_path)
+    assert _measured() == len(SPACE) * len(FUSE)   # stale entry ignored
+
+
+def test_corrupt_entry_is_a_miss(tmp_path):
+    _tune(tmp_path)
+    (path,) = glob.glob(str(tmp_path / "tune-*.json"))
+    with open(path, "w") as f:
+        f.write("{ not json")
+    at.clear_cache()
+    at.reset_measure_count()
+    res = _tune(tmp_path)                   # re-measures, then rewrites
+    assert _measured() == len(SPACE) * len(FUSE)
+    assert res.fuse_steps in FUSE
+    with open(path) as f:
+        assert json.load(f)["schema"] == at.SCHEMA_VERSION
+
+
+def test_clear_disk_cache(tmp_path):
+    _tune(tmp_path)
+    _tune(tmp_path, shape=(20, 20))
+    assert at.clear_disk_cache(str(tmp_path)) == 2
+    assert not glob.glob(str(tmp_path / "tune-*.json"))
+    assert at.clear_disk_cache(str(tmp_path / "nonexistent")) == 0
+
+
+def test_env_var_directory(tmp_path, monkeypatch):
+    monkeypatch.setenv(at.CACHE_ENV, str(tmp_path))
+    assert at.cache_dir_from_env() == str(tmp_path)
+    k = suite.get_kernel("star2d1r")
+    grids = {g: st.grid(st.f32, (12, 18), k.info.order).randomize(i)
+             for i, g in enumerate(k.ir.grid_params)}
+    at.tune(k, grids, iters=1, space=SPACE, swap=("v", "u"), steps=4,
+            fuse_space=FUSE, time_block_space=(1,))
+    assert len(glob.glob(str(tmp_path / "tune-*.json"))) == 1
+
+
+def test_fingerprint_and_bucket_helpers():
+    k = suite.get_kernel("star2d1r")
+    fp = at.kernel_fingerprint(k)
+    assert fp == at.kernel_fingerprint(k) and len(fp) == 16
+    assert fp != at.kernel_fingerprint(suite.get_kernel("star2d2r"))
+    assert at.shape_bucket((12, 18)) == (16, 32)
+    assert at.shape_bucket((3, 8, 513)) == (8, 8, 1024)

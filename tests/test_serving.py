@@ -90,6 +90,24 @@ def test_batch_server_waves():
     assert all(r.done_at >= r.submitted_at for r in done.values())
 
 
+def test_batch_server_single_compile():
+    """Power-of-two context bucketing: a stream of varied prompt lengths
+    whose (prompt + max_new) all land in one ctx bucket must share ONE
+    compiled decode step across every wave — per-wave recompilation was
+    the old behavior this pins against."""
+    cfg, params = _setup()
+    srv = BatchServer(cfg, params, batch_size=3,
+                      gen=GenConfig(max_new_tokens=4))
+    rng = np.random.default_rng(1)
+    # prompt len 5..12 + max_new 4 -> ctx 9..16: one pow2 bucket (16)
+    uids = [srv.submit(rng.integers(0, cfg.vocab, int(rng.integers(5, 13))),
+                       max_new_tokens=4) for _ in range(7)]
+    done = srv.run_until_drained()
+    assert sorted(done) == sorted(uids)
+    assert all(len(r.result) == 4 for r in done.values())
+    assert srv._generator._step._cache_size() == 1
+
+
 def test_ssm_constant_state_decode():
     """xLSTM decode state is O(1) — independent of context length."""
     cfg, params = _setup("xlstm-1.3b")

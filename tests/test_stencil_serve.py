@@ -1,0 +1,205 @@
+"""Shape-bucketed serving: the pure admission/pack/unpack functions and
+the SimServer end-to-end against per-request serial references."""
+import numpy as np
+import pytest
+
+from repro.core import dsl as st, suite
+from repro.serving.stencil_serve import (SimServer, bucket_key, default_swap,
+                                         form_waves, pack_wave, unpack_wave)
+
+
+def _k():
+    return suite.get_kernel("star2d1r")
+
+
+def _serial(kernel, shape, steps, payload, scalars=None):
+    """Per-request reference: one unbatched st.timeloop run."""
+    k = suite.get_kernel(kernel) if isinstance(kernel, str) else kernel
+    gs = {g: st.grid(st.f32, shape, k.info.order) for g in k.ir.grid_params}
+    for g, val in payload.items():
+        gs[g].interior = val
+    if steps:
+        args = [gs[g] for g in k.ir.grid_params] + \
+               [float(v) for v in (scalars or {}).values()]
+        st.launch(backend=st.xla())(lambda: st.timeloop(
+            steps, swap=default_swap(k))(k)(*args))()
+    return {g: np.asarray(gs[g].interior) for g in gs}
+
+
+# ---- pure functions --------------------------------------------------------
+def test_bucket_key_pow2_rounding():
+    assert bucket_key("star2d1r", (12, 18)) == \
+        ("star2d1r", (16, 32), "float32")
+    # floor of 8 per axis, mixed sizes in one bucket
+    assert bucket_key("star2d1r", (3, 5)) == ("star2d1r", (8, 8), "float32")
+    assert bucket_key("star2d1r", (16, 32)) == \
+        bucket_key("star2d1r", (9, 17))
+    assert bucket_key("star2d1r", (12, 18), "float64")[2] == "float64"
+
+
+def test_default_swap():
+    assert default_swap(_k()) == ("v", "u")
+
+    @st.kernel
+    def three(u: st.grid, v: st.grid, c: st.grid):
+        v.at(0, 0).set(c.at(0, 0) * u.at(0, 0))
+    assert default_swap(three) is None
+
+
+def test_form_waves():
+    reqs = list(range(7))
+    waves = form_waves(reqs, 3)
+    assert [len(w) for w in waves] == [3, 3, 1]
+    assert [x for w in waves for x in w] == reqs
+    assert form_waves([], 3) == []
+
+
+def test_pack_wave_embeds_and_pads():
+    k = _k()
+    bucket = (16, 16)
+    u0 = np.arange(10 * 12, dtype=np.float32).reshape(10, 12)
+    srv = SimServer()
+    uid = srv.submit("star2d1r", (10, 12), 4, {"u": u0})
+    (req,) = srv._queues[bucket_key("star2d1r", (10, 12))]
+    arrays, mask, limits = pack_wave(k, bucket, [req], batch_cap=3)
+    assert arrays["u"].shape == (3, 18, 18)       # cap x (bucket + 2*order)
+    # interior payload lands at the corner, inside the halo offset
+    np.testing.assert_array_equal(np.asarray(arrays["u"][0, 1:11, 1:13]), u0)
+    assert np.asarray(arrays["u"][0, 0]).max() == 0      # zero halos
+    # mask covers exactly the true sub-domain
+    m = np.asarray(mask)
+    assert m[0, :10, :12].all() and not m[0, 10:, :].any() \
+        and not m[0, :, 12:].any()
+    # dummy slots: all-zero fields, all-False mask, zero budget
+    assert not m[1:].any()
+    assert np.asarray(arrays["u"][1:]).max() == 0
+    assert list(np.asarray(limits)) == [4, 0, 0]
+    assert uid == req.uid
+
+
+def test_pack_wave_halo_padded_payload():
+    k = _k()
+    full = np.random.default_rng(0).standard_normal((8, 8)).astype(np.float32)
+    srv = SimServer()
+    srv.submit("star2d1r", (6, 6), 2, {"u": full})   # 6+2*order = 8
+    (req,) = srv._queues[bucket_key("star2d1r", (6, 6))]
+    arrays, _, _ = pack_wave(k, (8, 8), [req], batch_cap=1)
+    # halo-padded payloads land at the origin, boundary values included
+    np.testing.assert_array_equal(np.asarray(arrays["u"][0, :8, :8]), full)
+
+
+def test_pack_wave_errors():
+    k = _k()
+
+    def mk(shape, payload):
+        srv = SimServer()
+        srv.submit("star2d1r", shape, 1, payload)
+        (req,) = next(iter(srv._queues.values()))
+        return req
+
+    with pytest.raises(ValueError, match="exceeds cap"):
+        pack_wave(k, (8, 8), [mk((4, 4), {})] * 3, batch_cap=2)
+    with pytest.raises(ValueError, match="exceeds bucket"):
+        pack_wave(k, (8, 8), [mk((9, 4), {})], batch_cap=1)
+    with pytest.raises(ValueError, match="payload 'u'"):
+        pack_wave(k, (8, 8), [mk((4, 4), {"u": np.zeros((5, 5),
+                                                        np.float32)})],
+                  batch_cap=1)
+
+
+def test_unpack_wave_roundtrip():
+    k = _k()
+    rng = np.random.default_rng(1)
+    srv = SimServer()
+    shapes = [(5, 7), (8, 8)]
+    payloads = [{g: rng.standard_normal(s).astype(np.float32)
+                 for g in k.ir.grid_params} for s in shapes]
+    for s, p in zip(shapes, payloads):
+        srv.submit("star2d1r", s, 0, p)
+    reqs = [r for q in srv._queues.values() for r in q]
+    arrays, _, _ = pack_wave(k, (8, 8), reqs, batch_cap=4)
+    outs = unpack_wave(k, arrays, reqs)
+    for p, o in zip(payloads, outs):
+        for g in k.ir.grid_params:
+            np.testing.assert_array_equal(o[g], p[g])
+
+
+# ---- end-to-end ------------------------------------------------------------
+def test_server_matches_serial_mixed_stream():
+    """Mixed shapes/steps across two buckets, incl. a steps=0 request —
+    every result equals its own serial small-domain run."""
+    rng = np.random.default_rng(2)
+    jobs = [((10, 12), 5), ((16, 16), 3), ((9, 14), 0),
+            ((10, 12), 7), ((4, 4), 2)]       # buckets (16,16) and (8,8)
+    srv = SimServer(batch_cap=3, fuse_window=4)
+    uids, refs = [], []
+    for shape, steps in jobs:
+        u0 = rng.standard_normal(shape).astype(np.float32)
+        uids.append(srv.submit("star2d1r", shape, steps, {"u": u0}))
+        refs.append(_serial("star2d1r", shape, steps, {"u": u0}))
+    done = srv.run_until_drained()
+    assert srv.pending() == 0
+    assert srv.waves_run == 3                 # (16,16): 3+1 reqs, (8,8): 1
+    for uid, ref in zip(uids, refs):
+        for g, want in ref.items():
+            np.testing.assert_allclose(done[uid].result[g], want,
+                                       rtol=1e-5, atol=1e-6, err_msg=g)
+        assert done[uid].done_at >= done[uid].submitted_at
+
+
+def test_server_per_request_scalars():
+    @st.kernel
+    def damped(u: st.grid, v: st.grid, a: st.f32):
+        v.at(0, 0).set(a * u.at(0, 0) + 0.1 * (u.at(-1, 0) + u.at(1, 0)))
+
+    rng = np.random.default_rng(3)
+    srv = SimServer(batch_cap=2, fuse_window=2, kernels={"damped": damped})
+    uids, refs = [], []
+    for a in (0.25, 0.75):
+        u0 = rng.standard_normal((6, 6)).astype(np.float32)
+        uids.append(srv.submit("damped", (6, 6), 4, {"u": u0},
+                               scalars={"a": a}))
+        refs.append(_serial(damped, (6, 6), 4, {"u": u0}, {"a": a}))
+    done = srv.run_until_drained()
+    for uid, ref in zip(uids, refs):
+        np.testing.assert_allclose(done[uid].result["v"], ref["v"],
+                                   rtol=1e-5, atol=1e-6)
+    assert not np.allclose(done[uids[0]].result["v"],
+                           done[uids[1]].result["v"])
+
+
+def test_deadline_and_cap_gating():
+    srv = SimServer(batch_cap=2, deadline_s=3600.0)
+    srv.submit("star2d1r", (4, 4), 1, {})
+    assert srv.step() == []                   # partial wave, deadline far
+    assert srv.pending() == 1
+    srv.submit("star2d1r", (4, 4), 1, {})
+    served = srv.step()                       # cap reached -> ready
+    assert len(served) == 2 and srv.pending() == 0
+    srv.submit("star2d1r", (4, 4), 1, {})
+    assert len(srv.step(force=True)) == 1     # force overrides the deadline
+    srv2 = SimServer(batch_cap=8, deadline_s=0.0)
+    srv2.submit("star2d1r", (4, 4), 1, {})
+    assert len(srv2.step()) == 1              # zero deadline -> immediate
+
+
+def test_waves_share_one_engine_per_bucket():
+    srv = SimServer(batch_cap=2, fuse_window=2)
+    for steps in (1, 3, 6, 2, 5):             # varied budgets, one bucket
+        srv.submit("star2d1r", (6, 7), steps,
+                   {"u": np.ones((6, 7), np.float32)})
+    srv.run_until_drained()
+    assert srv.waves_run == 3
+    assert len(srv._engines) == 1             # one compiled program
+    (eng, fuse) = next(iter(srv._engines.values()))
+    assert fuse == 2 and eng.batch == 2
+
+
+def test_submit_validation():
+    srv = SimServer()
+    with pytest.raises(ValueError, match="2D"):
+        srv.submit("star2d1r", (4, 4, 4), 1, {})
+    with pytest.raises(ValueError, match="steps"):
+        srv.submit("star2d1r", (4, 4), -1, {})
+    with pytest.raises(ValueError):
+        SimServer(batch_cap=0)

@@ -26,10 +26,16 @@ add or rename rows).
 
 The guard set is selected by the benchmark kind, auto-detected from the
 fresh JSON's top-level keys: ``BENCH_timeloop.json`` guards fusion /
-temporal-blocking ratios, ``BENCH_serve.json`` guards the same-run
-batched-vs-serial serving speedup plus two *absolute* invariants of the
-persistent autotune cache — a warm cache must serve with **zero**
-measured candidates (threshold overrides never relax absolutes).
+temporal-blocking ratios plus the *absolute* cost-model-quality
+invariants of the two-stage autotuner (the predicted ranking must place
+the measured-best candidate in the top-K, the pruned search must stay
+within 10% of the exhaustive winner, and it must measure at most K
+candidates — booleans computed in-run, machine-independent);
+``BENCH_serve.json`` guards the same-run batched-vs-serial serving
+speedup plus the absolute invariants of the persistent autotune cache —
+a warm cache must serve with **zero** measured candidates and a cold
+one must measure at most its top-K shortlist (threshold overrides never
+relax absolutes).
 
     python -m benchmarks.check_regression baseline.json fresh.json
 """
@@ -55,17 +61,30 @@ GUARDED_SERVE = (
 )
 
 #: (dotted path, required value) checked on the FRESH file only —
-#: deterministic counters, not timings, so equality is exact
+#: deterministic counters / in-run booleans, not timings, so equality
+#: is exact
 ABSOLUTE_SERVE = (
     ("autotune_cache.warm.measured_candidates", 0),
+    ("autotune_cache.cold.measured_at_most_top_k", True),
 )
+
+#: cost-model quality: for every benchmarked kernel the predicted
+#: ranking must place the measured-best candidate inside the top-K
+#: shortlist, the pruned two-stage winner must be within 10% of the
+#: exhaustive winner (same-run measurements), and the two-stage search
+#: must measure no more than its shortlist
+ABSOLUTE_TIMELOOP = tuple(
+    (f"predicted_vs_measured.{kernel}.{flag}", True)
+    for kernel in ("star2d1r", "star3d4r")
+    for flag in ("best_in_top_k", "two_stage_within_10pct",
+                 "measured_at_most_top_k"))
 
 
 def _guards_for(fresh: dict):
     """(ratio guards, absolute guards) for the benchmark kind of a file."""
     if "serve_stream" in fresh:
         return GUARDED_SERVE, ABSOLUTE_SERVE
-    return GUARDED_TIMELOOP, ()
+    return GUARDED_TIMELOOP, ABSOLUTE_TIMELOOP
 
 
 def _get(d: dict, path: str):

@@ -49,7 +49,16 @@ def main(argv=None):
     from benchmarks import timeloop as bench_timeloop
     tl = bench_timeloop.run(fast=args.fast)
     for name, r in tl.items():
-        if "fused_steps_per_s" in r:
+        if name == "predicted_vs_measured":
+            # two-stage autotuner quality: nested per-kernel rows
+            for key, row in sorted(r.items()):
+                print(f"csv,timeloop_pvm_{key}_measured,"
+                      f"{row['measured_candidates_two_stage']}")
+                print(f"csv,timeloop_pvm_{key}_pruned,"
+                      f"{row['pruned_candidates']}")
+                print(f"csv,timeloop_pvm_{key}_rank_of_best,"
+                      f"{row['rank_of_measured_best']}")
+        elif "fused_steps_per_s" in r:
             print(f"csv,timeloop_{name}_steps_per_s,"
                   f"{r['fused_steps_per_s']:.1f}")
             print(f"csv,timeloop_{name}_speedup,{r['speedup']:.2f}")

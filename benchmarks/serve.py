@@ -16,9 +16,12 @@ machine-independent ratios and counters:
     Both paths include their compile cost — this is the cold-serve story,
     where sharing one program across the bucket is precisely the win.
   * **autotune_cache** — first-request wall time of a tuned server
-    against a cold on-disk autotune cache (measures every candidate) and
-    against a warm one (a fresh process reading the previous entry).
-    ``warm.measured_candidates`` must be 0 — the series CI asserts.
+    against a cold on-disk autotune cache (two-stage search: the cost
+    model ranks every fuse candidate, only the ``tune_top_k`` cheapest
+    are measured — ``pruned_candidates``/``pruning_factor`` report the
+    saving) and against a warm one (a fresh process reading the previous
+    entry).  ``warm.measured_candidates`` must be 0 and
+    ``cold.measured_at_most_top_k`` must hold — the series CI asserts.
 
     PYTHONPATH=src python -m benchmarks.serve [--fast]
 """
@@ -34,6 +37,7 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core import autotune as _at
+from repro.core import cost_model as _cm
 from repro.core import dsl as st
 from repro.core import suite
 from repro.core import timeloop as _tl
@@ -118,12 +122,14 @@ def _bench_stream(n_requests: int, batch_cap: int) -> Dict:
     }
 
 
-def _one_tuned_request(cache_dir: str) -> Tuple[float, int]:
+def _one_tuned_request(cache_dir: str) -> Tuple[float, int, int]:
     """Serve a single request on a tuned server as a fresh process would:
-    cold in-process caches, persistent cache at ``cache_dir``.  Returns
-    (wall seconds, candidates measured)."""
+    cold in-process caches (tune results *and* cost-model calibration —
+    the persisted roofline in ``cache_dir`` survives, like on disk).
+    Returns (wall seconds, candidates measured, candidates pruned)."""
     _at.clear_cache()
     _at.reset_measure_count()
+    _cm.reset_default_models()
     k = suite.get_kernel(KERNEL)
     rng = np.random.default_rng(7)
     shape = SHAPES[0]
@@ -134,18 +140,26 @@ def _one_tuned_request(cache_dir: str) -> Tuple[float, int]:
     srv.submit(KERNEL, shape, 8, payload)
     srv.run_until_drained()
     dt = time.perf_counter() - t0
-    return dt, int(_at.MEASURE_COUNT["measured_candidates"])
+    return (dt, int(_at.MEASURE_COUNT["measured_candidates"]),
+            int(_at.MEASURE_COUNT["pruned_candidates"]))
 
 
 def _bench_autotune_cache() -> Dict:
     cdir = tempfile.mkdtemp(prefix="repro-autotune-bench-")
     try:
-        cold_s, cold_n = _one_tuned_request(cdir)
-        warm_s, warm_n = _one_tuned_request(cdir)
+        cold_s, cold_n, cold_pruned = _one_tuned_request(cdir)
+        warm_s, warm_n, _ = _one_tuned_request(cdir)
     finally:
         shutil.rmtree(cdir, ignore_errors=True)
+    top_k = SimServer(batch_cap=1).tune_top_k
+    space = cold_n + cold_pruned
     return {
-        "cold": {"first_request_s": cold_s, "measured_candidates": cold_n},
+        "cold": {"first_request_s": cold_s, "measured_candidates": cold_n,
+                 "space_candidates": space, "top_k": top_k,
+                 "pruned_candidates": cold_pruned,
+                 "pruning_factor": space / cold_n if cold_n else 0.0,
+                 "measured_at_most_top_k": bool(
+                     top_k is None or cold_n <= top_k)},
         "warm": {"first_request_s": warm_s, "measured_candidates": warm_n},
         "warm_vs_cold_speedup": cold_s / warm_s if warm_s > 0 else 0.0,
     }
@@ -170,7 +184,9 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
               f"p99 {s['p99_latency_s'] * 1e3:.0f}ms", flush=True)
         a = results["autotune_cache"]
         print(f"autotune_cache: cold {a['cold']['first_request_s']:.2f}s "
-              f"({a['cold']['measured_candidates']} measured)  "
+              f"({a['cold']['measured_candidates']}/"
+              f"{a['cold']['space_candidates']} measured, "
+              f"{a['cold']['pruned_candidates']} pruned)  "
               f"warm {a['warm']['first_request_s']:.2f}s "
               f"({a['warm']['measured_candidates']} measured)", flush=True)
         print(f"wrote {OUT_PATH}")

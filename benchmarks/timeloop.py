@@ -28,7 +28,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import acoustic, dsl as st, suite
+from repro.core import acoustic, autotune, cost_model, dsl as st, suite
 from repro.kernels.stencil import codegen
 
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
@@ -152,6 +152,68 @@ def _bench_acoustic(steps: int, shape, repeats: int = 2) -> Dict:
     }
 
 
+def _bench_predicted_vs_measured(name: str, shape, steps: int,
+                                 space, fuse_space, time_block_space,
+                                 top_k: int = 3) -> Dict:
+    """Cost-model quality on a real search space: run the exhaustive
+    search (top_k=None) and the two-stage pruned search over the same
+    candidates, then compare the two winners with the *exhaustive* run's
+    measurements (same-run numbers, so the ratio is not same-candidate
+    noise).  ``best_in_top_k`` / ``two_stage_within_10pct`` /
+    ``measured_at_most_top_k`` are the machine-independent booleans CI
+    guards."""
+    k = suite.get_kernel(name)
+    swap = suite.swap_pair(name)
+    model = cost_model.default_model()
+
+    def grids():
+        return suite.make_grids(name, shape=shape)
+
+    def search(top):
+        autotune.clear_cache()
+        autotune.reset_measure_count()
+        res = autotune.tune(k, grids(), iters=1, space=space, swap=swap,
+                            steps=steps, fuse_space=fuse_space,
+                            time_block_space=time_block_space,
+                            top_k=top, cost_model=model)
+        return res, dict(autotune.MEASURE_COUNT)
+
+    exhaustive, _ = search(None)
+    two_stage, counts = search(top_k)
+
+    def trial_key(backend, fuse):
+        return (backend.cache_key(), fuse)
+
+    ex_by_key = {trial_key(b, f): dt for b, f, dt in exhaustive.trials}
+    ts_in_ex = ex_by_key.get(trial_key(two_stage.backend,
+                                       two_stage.fuse_steps))
+    ratio = (ts_in_ex / exhaustive.seconds
+             if ts_in_ex is not None and exhaustive.seconds > 0 else None)
+    n_cands = len(exhaustive.trials)
+    rank = exhaustive.rank_error
+    return {
+        "kernel": name, "shape": list(shape), "steps": steps,
+        "candidates": n_cands,
+        "top_k": top_k,
+        "exhaustive_best_seconds": exhaustive.seconds,
+        "exhaustive_best_backend": str(exhaustive.backend),
+        "exhaustive_best_fuse": exhaustive.fuse_steps,
+        "two_stage_best_seconds": two_stage.seconds,
+        "two_stage_best_backend": str(two_stage.backend),
+        "two_stage_best_fuse": two_stage.fuse_steps,
+        "two_stage_best_seconds_in_exhaustive": ts_in_ex,
+        "two_stage_vs_exhaustive": ratio,
+        "two_stage_within_10pct": bool(ratio is not None and ratio <= 1.10),
+        "rank_of_measured_best": rank,
+        "best_in_top_k": bool(rank is not None and rank < top_k),
+        "measured_candidates_two_stage": counts["measured_candidates"],
+        "pruned_candidates": counts["pruned_candidates"],
+        "measured_at_most_top_k": bool(
+            counts["measured_candidates"] <= top_k
+            + sum(1 for _, _, p in two_stage.predicted if p is None)),
+    }
+
+
 def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
     steps = 30 if fast else 100
     results = {
@@ -165,12 +227,34 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
         # admits the full time_block ∈ {1, 2, 4} sweep (k·h = 16 ≤ block)
         "star3d4r_pallas": _bench_pallas_sweep(
             "star3d4r", 4 if fast else 8, None, repeats=1 if fast else 2),
+        # two-stage autotuner quality: exhaustive vs cost-model-pruned
+        # search over mixed xla/pallas spaces (CI guards the booleans)
+        "predicted_vs_measured": {
+            "star2d1r": _bench_predicted_vs_measured(
+                "star2d1r", (48, 48), 8,
+                space=[st.xla(), st.pallas(template="gmem"),
+                       st.pallas(template="smem")],
+                fuse_space=(1, 8), time_block_space=(1, 2)),
+            "star3d4r": _bench_predicted_vs_measured(
+                "star3d4r", (16, 16, 32), 4,
+                space=[st.xla(), st.pallas(template="gmem")],
+                fuse_space=(1, 4), time_block_space=(1, 2)),
+        },
     }
     with open(OUT_PATH, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
     if verbose:
         for name, r in results.items():
-            if "unfused_steps_per_s" in r:
+            if name == "predicted_vs_measured":
+                for key, row in sorted(r.items()):
+                    print(f"{name:16s} {key:13s} "
+                          f"measured {row['measured_candidates_two_stage']}"
+                          f"/{row['candidates']} cands  "
+                          f"rank-of-best {row['rank_of_measured_best']}  "
+                          f"vs exhaustive "
+                          f"{row['two_stage_vs_exhaustive']:.3f}x",
+                          flush=True)
+            elif "unfused_steps_per_s" in r:
                 print(f"{name:16s} {r['steps']:4d} steps  "
                       f"per-step {r['unfused_steps_per_s']:8.1f} steps/s  "
                       f"fused {r['fused_steps_per_s']:8.1f} steps/s  "

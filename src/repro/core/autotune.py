@@ -23,6 +23,18 @@ Candidates are deduplicated on (backend, fuse_steps) before measuring —
 a custom ``space`` overlapping ``fuse_space``/``time_block_space`` pays
 for each distinct configuration once.
 
+**Two-stage search** (``top_k``): when the deduplicated space exceeds
+``top_k`` candidates, every candidate is first *ranked* by the
+analytical cost model (``core/cost_model.py`` — modeled HBM traffic over
+a calibrated roofline, no compilation) and only the ``top_k`` cheapest
+predicted are measured; candidates the model cannot predict (e.g.
+distributed backends) are always measured.  ``top_k=None`` recovers the
+exhaustive search.  ``TuneResult`` records the predictions, the
+pruned-candidate count, and the predicted rank of the measured winner
+(``rank_error`` — 0 means the model's first choice won), and the disk
+cache persists all three so ``benchmarks/check_regression.py`` can guard
+model quality.
+
 Results are cached per (kernel, grid geometry, search space, iters,
 time-loop configuration) so repeated launches pay once; a custom ``space``
 or ``iters`` gets its own cache entry (``clear_cache()`` resets).
@@ -54,20 +66,27 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from . import cost_model as _cost
 from . import dsl as st
 from . import timeloop as _tl
+from .cost_model import kernel_fingerprint  # noqa: F401  (re-export)
 
 _CACHE: Dict = {}
 
 #: bump when the on-disk entry layout changes — old entries then miss
-SCHEMA_VERSION = 1
+#: (and ``purge_stale`` removes them on first touch of the directory).
+#: v2: two-stage search fields (predictions, pruning, rank error) and the
+#: cost-model calibration version in the key.
+SCHEMA_VERSION = 2
 
 #: environment variable naming the on-disk cache directory
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 
 #: measured-candidate counter: ``MEASURE_COUNT["measured_candidates"]``
-#: increments once per (backend, fuse) configuration actually timed.
-#: A warm cache (in-process or disk) serves without touching it.
+#: increments once per (backend, fuse) configuration actually timed, and
+#: ``MEASURE_COUNT["pruned_candidates"]`` once per candidate the cost
+#: model pruned from the measured shortlist.  A warm cache (in-process
+#: or disk) serves without touching either.
 MEASURE_COUNT: collections.Counter = collections.Counter()
 
 
@@ -89,19 +108,26 @@ def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
     return tuple(max(8, 1 << (int(s) - 1).bit_length()) for s in shape)
 
 
-def kernel_fingerprint(kernel: st.Kernel) -> str:
-    """Content hash of a kernel: name + its StencilIR repr.  Editing the
-    kernel body changes the fingerprint, invalidating disk entries."""
-    text = f"{kernel.name}:{kernel.ir!r}"
-    return hashlib.sha256(text.encode()).hexdigest()[:16]
-
-
 @dataclasses.dataclass
 class TuneResult:
     backend: st.Backend
     seconds: float
     trials: List[Tuple[st.Backend, int, float]]  # (backend, fuse_steps, s)
     fuse_steps: int = 1
+    #: every candidate with its modeled cost — (backend, fuse_steps,
+    #: predicted seconds | inf (infeasible) | None (unpredictable)).
+    #: Empty when no cost model ran (small space, no explicit model).
+    predicted: List[Tuple[st.Backend, int, Optional[float]]] = \
+        dataclasses.field(default_factory=list)
+    #: candidates ranked out of the measured shortlist by the cost model
+    pruned_candidates: int = 0
+    #: candidates actually timed (== len(trials))
+    measured_candidates: int = 0
+    #: predicted rank (0-based) of the measured-best candidate — 0 means
+    #: the model's first choice also measured fastest; None without a model
+    rank_error: Optional[int] = None
+    #: the shortlist size this result was tuned with (None = exhaustive)
+    top_k: Optional[int] = None
 
 
 # --------------------------------------------------------------------------
@@ -134,12 +160,26 @@ def _seconds_to_json(s: float):
     return None if not np.isfinite(s) else float(s)
 
 
+def _pred_to_json(p: Optional[float]):
+    """Predictions distinguish inf (infeasible) from None (unpredictable),
+    and JSON has no inf — encode it as the string "inf"."""
+    if p is None:
+        return None
+    return "inf" if not np.isfinite(p) else float(p)
+
+
+def _pred_from_json(p):
+    if p is None:
+        return None
+    return float("inf") if p == "inf" else float(p)
+
+
 def cache_dir_from_env() -> Optional[str]:
     return os.environ.get(CACHE_ENV) or None
 
 
 def _disk_key(kernel, grids, iters, space, swap, steps, fuse_space,
-              time_block_space) -> Tuple[str, dict]:
+              time_block_space, top_k) -> Tuple[str, dict]:
     """(digest, human-readable key dict) for one disk entry.
 
     Geometry enters as the *shape bucket* (plus halo order and dtype), so
@@ -160,6 +200,10 @@ def _disk_key(kernel, grids, iters, space, swap, steps, fuse_space,
         "fuse_space": [int(f) for f in fuse_space] if swap else None,
         "time_block_space":
             [int(t) for t in time_block_space] if swap else None,
+        "top_k": int(top_k) if top_k is not None else None,
+        # a recalibrated cost model can change the shortlist, so the
+        # calibration version is part of the key
+        "calibration": _cost.CALIBRATION_VERSION,
         "jax_backend": jax.default_backend(),
     }
     blob = json.dumps(readable, sort_keys=True)
@@ -179,11 +223,24 @@ def _disk_load(cdir: str, digest: str, readable: dict) -> Optional[TuneResult]:
         trials = [(_backend_from_json(b), int(fs),
                    float("inf") if s is None else float(s))
                   for b, fs, s in entry["trials"]]
+        predicted = [(_backend_from_json(b), int(fs), _pred_from_json(p))
+                     for b, fs, p in entry.get("predicted", [])]
+        search = entry.get("search", {})
         best = entry["best"]
+        rank = search.get("rank_error")
+        tk = search.get("top_k")
         return TuneResult(backend=_backend_from_json(best["backend"]),
                           seconds=float("inf") if best["seconds"] is None
                           else float(best["seconds"]),
-                          trials=trials, fuse_steps=int(best["fuse_steps"]))
+                          trials=trials, fuse_steps=int(best["fuse_steps"]),
+                          predicted=predicted,
+                          pruned_candidates=int(
+                              search.get("pruned_candidates", 0)),
+                          measured_candidates=int(
+                              search.get("measured_candidates",
+                                         len(trials))),
+                          rank_error=int(rank) if rank is not None else None,
+                          top_k=int(tk) if tk is not None else None)
     except (KeyError, TypeError, ValueError):
         return None
 
@@ -191,7 +248,9 @@ def _disk_load(cdir: str, digest: str, readable: dict) -> Optional[TuneResult]:
 def _disk_store(cdir: str, digest: str, readable: dict,
                 result: TuneResult) -> None:
     bjs = [(_backend_to_json(b), f, s) for b, f, s in result.trials]
+    pjs = [(_backend_to_json(b), f, p) for b, f, p in result.predicted]
     if any(b is None for b, _, _ in bjs) \
+            or any(b is None for b, _, _ in pjs) \
             or _backend_to_json(result.backend) is None:
         return  # non-serializable backend in the space (e.g. distributed)
     entry = {
@@ -201,6 +260,11 @@ def _disk_store(cdir: str, digest: str, readable: dict,
                  "fuse_steps": int(result.fuse_steps),
                  "seconds": _seconds_to_json(result.seconds)},
         "trials": [[b, int(f), _seconds_to_json(s)] for b, f, s in bjs],
+        "predicted": [[b, int(f), _pred_to_json(p)] for b, f, p in pjs],
+        "search": {"top_k": result.top_k,
+                   "pruned_candidates": int(result.pruned_candidates),
+                   "measured_candidates": int(result.measured_candidates),
+                   "rank_error": result.rank_error},
     }
     os.makedirs(cdir, exist_ok=True)
     # checkpoint.py's tmp-then-rename idiom: readers never see torn writes
@@ -214,6 +278,39 @@ def _disk_store(cdir: str, digest: str, readable: dict,
             os.unlink(tmp)
         except OSError:
             pass
+
+
+#: directories already swept by ``purge_stale`` this process (one-shot)
+_PURGED: set = set()
+
+
+def purge_stale(cdir: Optional[str] = None) -> int:
+    """Remove tune entries written under a different ``SCHEMA_VERSION``
+    (or unreadable ones) from ``cdir``.  Without this a schema bump would
+    strand every old file on disk forever — a changed key layout also
+    changes the digest, so stale files would never even be overwritten.
+    ``tune`` runs this once per directory per process on first touch.
+    Returns the number of entries removed."""
+    cdir = cdir or cache_dir_from_env()
+    if not cdir or not os.path.isdir(cdir):
+        return 0
+    n = 0
+    for name in os.listdir(cdir):
+        if not (name.startswith("tune-") and name.endswith(".json")):
+            continue
+        path = os.path.join(cdir, name)
+        try:
+            with open(path) as f:
+                stale = json.load(f).get("schema") != SCHEMA_VERSION
+        except (OSError, json.JSONDecodeError):
+            stale = True
+        if stale:
+            try:
+                os.unlink(path)
+                n += 1
+            except OSError:
+                pass
+    return n
 
 
 def clear_disk_cache(cdir: Optional[str] = None) -> int:
@@ -363,6 +460,21 @@ def _space_key(space):
     return tuple(out)
 
 
+def shortlist_indices(predictions: Sequence[Optional[float]],
+                      top_k: int) -> List[int]:
+    """Candidate indices the two-stage search measures: the ``top_k``
+    cheapest predicted (ties broken by original order — deterministic),
+    plus every candidate the model cannot predict (``None``, e.g.
+    distributed backends — pruning those would silently drop
+    configurations the model knows nothing about).  Original order is
+    preserved."""
+    ranked = sorted((i for i, p in enumerate(predictions) if p is not None),
+                    key=lambda i: (predictions[i], i))
+    keep = set(ranked[:max(0, int(top_k))])
+    keep.update(i for i, p in enumerate(predictions) if p is None)
+    return sorted(keep)
+
+
 def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
          space: Optional[List] = None,
          verbose: bool = False,
@@ -370,8 +482,12 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
          steps: int = 16,
          fuse_space: Sequence[int] = (1, 4, 16),
          time_block_space: Sequence[int] = (1, 2, 4),
-         cache_dir: Optional[str] = None) -> TuneResult:
-    """Grid-search the backend (and, with ``swap``, the fusion window).
+         cache_dir: Optional[str] = None,
+         top_k: Optional[int] = 3,
+         cost_model: Optional[_cost.CostModel] = None) -> TuneResult:
+    """Search the backend (and, with ``swap``, the fusion window) —
+    two-stage: predict with the analytical cost model, measure a
+    shortlist.
 
     ``space`` entries may be plain backends or ``(backend, fuse_steps)``
     pairs.  Without ``swap`` the tuner measures single kernel applications;
@@ -380,12 +496,24 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     ``time_block_space`` in-kernel temporal depths for pallas backends
     (the winner's depth is carried on ``result.backend.time_block``).
 
+    ``top_k`` — when the deduplicated space exceeds ``top_k`` candidates,
+    rank all of them with the cost model (``cost_model`` if given, else a
+    process-shared calibrated ``cost_model.default_model``) and measure
+    only the ``top_k`` cheapest predicted (plus any the model cannot
+    predict).  ``top_k=None`` forces the exhaustive search.  Passing an
+    explicit ``cost_model`` computes predictions even when nothing is
+    pruned — how the benchmarks obtain full predicted-vs-measured data.
+
     ``cache_dir`` (or ``$REPRO_AUTOTUNE_CACHE``) enables the persistent
     on-disk cache: a miss in the in-process layer consults the disk entry
-    for this (kernel fingerprint, shape bucket, configuration) before
-    measuring anything, and a fresh measurement is written back
-    atomically.  Disk hits leave ``MEASURE_COUNT`` untouched.
+    for this (kernel fingerprint, shape bucket, configuration, top_k,
+    calibration version) before predicting or measuring anything, and a
+    fresh result is written back atomically.  Disk hits leave
+    ``MEASURE_COUNT`` untouched; the first touch of a directory purges
+    entries stranded by a ``SCHEMA_VERSION`` bump.
     """
+    if top_k is not None and int(top_k) < 1:
+        raise ValueError(f"top_k must be >= 1 or None (got {top_k})")
     g0 = next(iter(grids.values()))
     key = (kernel.name,
            tuple(sorted((n, g.shape, g.order, str(g.dtype))
@@ -394,14 +522,19 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
            tuple(swap) if swap else None,
            int(steps) if swap else None,
            tuple(int(f) for f in fuse_space) if swap else None,
-           tuple(int(t) for t in time_block_space) if swap else None)
+           tuple(int(t) for t in time_block_space) if swap else None,
+           int(top_k) if top_k is not None else None)
     if key in _CACHE:
         return _CACHE[key]
     cdir = cache_dir or cache_dir_from_env()
     digest = readable = None
     if cdir:
+        if cdir not in _PURGED:
+            _PURGED.add(cdir)
+            purge_stale(cdir)
         digest, readable = _disk_key(kernel, grids, iters, space, swap,
-                                     steps, fuse_space, time_block_space)
+                                     steps, fuse_space, time_block_space,
+                                     top_k)
         result = _disk_load(cdir, digest, readable)
         if result is not None:
             _CACHE[key] = result
@@ -409,8 +542,33 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     cands = _normalize_space(space, kernel.info.ndim, g0.shape, swap,
                              steps, fuse_space,
                              time_block_space if swap else (1,))
+
+    # stage 1: rank by predicted cost (geometry + calibrated roofline,
+    # no compilation) whenever pruning applies or a model was given
+    preds: List[Optional[float]] = []
+    if cost_model is not None or (top_k is not None
+                                  and len(cands) > int(top_k)):
+        cm = cost_model or _cost.default_model(cdir)
+        for backend, fuse in cands:
+            try:
+                p = cm.predict(kernel, grids, backend, fuse, steps, swap)
+            except Exception:
+                p = None
+            preds.append(p)
+            if verbose and p is not None:
+                print(f"  predict {backend} fuse={fuse}: {p:.5f}s",
+                      flush=True)
+    measure_idx = list(range(len(cands)))
+    pruned = 0
+    if top_k is not None and len(cands) > int(top_k):
+        measure_idx = shortlist_indices(preds, int(top_k))
+        pruned = len(cands) - len(measure_idx)
+        MEASURE_COUNT["pruned_candidates"] += pruned
+
+    # stage 2: measure the shortlist
     trials = []
-    for backend, fuse in cands:
+    for i in measure_idx:
+        backend, fuse = cands[i]
         if swap is None:
             dt = _measure(kernel, grids, backend, iters)
         else:
@@ -421,8 +579,25 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
         if verbose:
             print(f"  {backend} fuse={fuse}: {dt:.4f}s", flush=True)
     best = min(trials, key=lambda t: t[2])
+
+    rank_error = None
+    predicted = []
+    if preds:
+        predicted = [(cands[i][0], cands[i][1], preds[i])
+                     for i in range(len(cands))]
+        order = sorted((i for i, p in enumerate(preds) if p is not None),
+                       key=lambda i: (preds[i], i))
+        best_key = (best[0].cache_key(), best[1])
+        for rank, i in enumerate(order):
+            if (cands[i][0].cache_key(), cands[i][1]) == best_key:
+                rank_error = rank
+                break
     result = TuneResult(backend=best[0], seconds=best[2], trials=trials,
-                        fuse_steps=best[1])
+                        fuse_steps=best[1], predicted=predicted,
+                        pruned_candidates=pruned,
+                        measured_candidates=len(trials),
+                        rank_error=rank_error,
+                        top_k=int(top_k) if top_k is not None else None)
     _CACHE[key] = result
     if cdir:
         _disk_store(cdir, digest, readable, result)

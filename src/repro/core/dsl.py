@@ -31,7 +31,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -267,6 +267,7 @@ class _Ctx(threading.local):
         self.active = False
         self.fuse_steps: Optional[int] = None
         self.time_block: Optional[int] = None
+        self.autotune: Optional[Dict[str, object]] = None
 
     def add(self, phase: str, dt: float):
         self.profile[phase] = self.profile.get(phase, 0.0) + dt
@@ -441,6 +442,28 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
     batch = call.batch or grid_batch
     backend = _CTX.backend if _CTX.active else xla()
     mesh = _CTX.mesh if _CTX.active else None
+    swap = _tl.normalize_swap(k.ir, call.swap)
+
+    at_cfg = _CTX.autotune if _CTX.active else None
+    tuned_fuse = None
+    if (at_cfg is not None and swap is not None and not batch
+            and call.steps > 0 and backend.kind != "distributed"):
+        # st.launch(autotune=...): pick the backend (and default fusion
+        # window) via the two-stage cost-model search.  The measurement
+        # launches inside tune() run under their own _Launcher, whose
+        # default autotune=None stops recursion.
+        from . import autotune as _at
+        tuned = _at.tune(
+            k, grids, iters=int(at_cfg.get("iters", 1)),
+            space=at_cfg.get("space"), swap=swap,
+            steps=min(call.steps, int(at_cfg.get("steps", 16))),
+            fuse_space=at_cfg.get("fuse_space", (1, 4, 16)),
+            time_block_space=at_cfg.get("time_block_space", (1, 2, 4)),
+            cache_dir=at_cfg.get("cache_dir"),
+            top_k=at_cfg.get("top_k", 3),
+            cost_model=at_cfg.get("cost_model"))
+        backend = tuned.backend
+        tuned_fuse = tuned.fuse_steps
     tb = _CTX.time_block if _CTX.active else None
     if tb is not None:
         # launch-level override of the in-kernel temporal-blocking depth
@@ -461,9 +484,10 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
     fuse = call.fuse_steps
     if fuse is None and _CTX.active:
         fuse = _CTX.fuse_steps
+    if fuse is None:
+        fuse = tuned_fuse        # autotuned window, unless overridden
     if fuse is not None:
         fuse = max(1, int(fuse))
-    swap = _tl.normalize_swap(k.ir, call.swap)
 
     key = ("timeloop", backend.cache_key(),
            tuple(sorted((n, g.shape, g.order, str(g.dtype))
@@ -556,19 +580,22 @@ def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region)
 class _Launcher:
     def __init__(self, backend: Backend, mesh=None, profile: bool = True,
                  fuse_steps: Optional[int] = None,
-                 time_block: Optional[int] = None):
+                 time_block: Optional[int] = None,
+                 autotune: Optional[Dict[str, object]] = None):
         self.backend, self.mesh, self.profile = backend, mesh, profile
         self.fuse_steps = fuse_steps
         self.time_block = time_block
+        self.autotune = autotune
 
     def __call__(self, tgt: Callable):
         def run(*args, **kw) -> LaunchResult:
             prev = (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
-                    _CTX.fuse_steps, _CTX.time_block)
+                    _CTX.fuse_steps, _CTX.time_block, _CTX.autotune)
             _CTX.backend, _CTX.mesh = self.backend, self.mesh
             _CTX.profile, _CTX.active = {}, True
             _CTX.fuse_steps = self.fuse_steps
             _CTX.time_block = self.time_block
+            _CTX.autotune = self.autotune
             t0 = time.perf_counter()
             try:
                 value = tgt(*args, **kw)
@@ -576,18 +603,47 @@ class _Launcher:
                 prof = _CTX.profile
                 prof["total"] = time.perf_counter() - t0
                 (_CTX.backend, _CTX.mesh, _CTX.profile, _CTX.active,
-                 _CTX.fuse_steps, _CTX.time_block) = prev
+                 _CTX.fuse_steps, _CTX.time_block, _CTX.autotune) = prev
             return LaunchResult(value=value, profile=prof)
         return run
 
 
 def launch(backend: Backend = None, mesh=None, profile: bool = True,
            fuse_steps: Optional[int] = None,
-           time_block: Optional[int] = None) -> _Launcher:
+           time_block: Optional[int] = None,
+           autotune: bool = False,
+           autotune_space: Optional[List] = None,
+           autotune_cache: Optional[str] = None,
+           autotune_top_k: Optional[int] = 3,
+           autotune_steps: int = 16,
+           autotune_iters: int = 1,
+           autotune_fuse_space: Sequence[int] = (1, 4, 16),
+           autotune_time_block_space: Sequence[int] = (1, 2, 4),
+           autotune_cost_model=None) -> _Launcher:
     """Run a ``@st.target`` under ``backend``.  ``fuse_steps`` sets the
     default fusion-window size for any ``st.timeloop`` inside the target
     (per-step ``st.map`` loops are unaffected).  ``time_block`` overrides
     the pallas backend's in-kernel temporal-blocking depth for those
-    timeloops (k leapfrog steps per kernel invocation; see st.pallas)."""
+    timeloops (k leapfrog steps per kernel invocation; see st.pallas).
+
+    ``autotune=True`` replaces the fixed ``backend`` for each
+    ``st.timeloop`` with the winner of the two-stage cost-model search
+    over ``autotune_space`` (see ``core/autotune.py``): all candidates
+    are ranked by predicted cost, only the ``autotune_top_k`` cheapest
+    are measured (``None`` → exhaustive), and results are cached
+    in-process and — with ``autotune_cache`` — on disk.  The tuned
+    fusion window applies unless ``fuse_steps`` (or the timeloop's own)
+    overrides it; ``time_block`` still applies on top of the tuned
+    backend.  Batched, distributed, and swap-less timeloops fall
+    through to the fixed backend unchanged."""
+    at_cfg = None
+    if autotune:
+        at_cfg = {"space": autotune_space, "cache_dir": autotune_cache,
+                  "top_k": autotune_top_k, "steps": int(autotune_steps),
+                  "iters": int(autotune_iters),
+                  "fuse_space": tuple(autotune_fuse_space),
+                  "time_block_space": tuple(autotune_time_block_space),
+                  "cost_model": autotune_cost_model}
     return _Launcher(backend or xla(), mesh=mesh, profile=profile,
-                     fuse_steps=fuse_steps, time_block=time_block)
+                     fuse_steps=fuse_steps, time_block=time_block,
+                     autotune=at_cfg)

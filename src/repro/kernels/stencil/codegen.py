@@ -1024,6 +1024,25 @@ class PallasPlan:
         write = len(self.step_out_grids) * math.prod(self.B)
         return nblocks * (read + write) * itemsize / self.time_block
 
+    def layout_bytes_per_window(self, itemsize: int = 4) -> float:
+        """Modeled HBM bytes of the one-time per-fusion-window costs that
+        ``hbm_bytes_per_step`` amortizes away: the ``to_padded`` layout
+        stage (read each operand's layout-halo'd window, write its padded
+        buffer), the ``make_spares`` double-buffer copies when temporally
+        blocked (read + write one padded buffer per advanced grid), and
+        the ``from_padded`` write-back of every touched grid's interior at
+        the window boundary.  The cost model charges this once per window,
+        which is why larger ``fuse_steps`` predict cheaper on this path."""
+        padded = math.prod(self.padded_shape)
+        total = 0.0
+        for g in self.opnd_grids:
+            total += math.prod(self.R[ax] + 2 * self.hw[g][ax]
+                               for ax in range(self.ndim)) + padded
+        if self.time_block > 1:
+            total += 2 * padded * len(self.step_out_grids)
+        total += 2 * math.prod(self.R) * len(self.touched)
+        return total * itemsize
+
     def count_window(self, steps: int, batch: int = 1) -> None:
         """Accumulate modeled traffic for a fused window of ``steps`` time
         steps into ``TRAFFIC_COUNT`` (windows of ``time_block`` plus a

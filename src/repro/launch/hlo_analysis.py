@@ -425,6 +425,12 @@ def summarize(st: Stats) -> Dict:
     }
 
 
+def hbm_bytes(hlo_text: str, n_devices: int = 1) -> float:
+    """Trip-count-aware HBM bytes of one executed step — the scalar the
+    stencil cost model (core/cost_model.py) charges xla candidates."""
+    return analyze(hlo_text, n_devices).hbm_bytes
+
+
 # -- back-compat wrappers (dryrun.py uses these names) -----------------------
 def collective_stats(hlo_text: str, n_devices: int) -> Stats:
     return analyze(hlo_text, n_devices)

@@ -174,6 +174,10 @@ class SimServer:
     ``kernels`` maps extra kernel names to ``st.Kernel`` objects (suite
     names resolve automatically); ``autotune_cache`` enables the
     persistent autotune cache directory for per-bucket fuse-window tuning.
+    Cold-start tuning is two-stage: the cost model ranks the
+    ``tune_fuse_space`` candidates and only the ``tune_top_k`` cheapest
+    are measured (``None`` → exhaustive; ``tune_cost_model`` injects a
+    pre-built ``cost_model.CostModel``).
     """
 
     def __init__(self, batch_cap: int = 8, deadline_s: float = 0.05,
@@ -182,7 +186,9 @@ class SimServer:
                  swaps: Optional[Mapping[str, Tuple[str, str]]] = None,
                  autotune_cache: Optional[str] = None,
                  tune_steps: int = 8,
-                 tune_fuse_space: Sequence[int] = (1, 4, 8)):
+                 tune_fuse_space: Sequence[int] = (1, 2, 4, 8, 16),
+                 tune_top_k: Optional[int] = 2,
+                 tune_cost_model=None):
         if batch_cap < 1:
             raise ValueError("batch_cap must be >= 1")
         self.batch_cap = int(batch_cap)
@@ -193,6 +199,8 @@ class SimServer:
         self.autotune_cache = autotune_cache
         self.tune_steps = int(tune_steps)
         self.tune_fuse_space = tuple(tune_fuse_space)
+        self.tune_top_k = tune_top_k
+        self.tune_cost_model = tune_cost_model
         self._queues: Dict[Tuple, List[SimRequest]] = {}
         self._engines: Dict[Tuple, Tuple[_tl.TimeloopEngine, int]] = {}
         self._uid = itertools.count()
@@ -245,15 +253,19 @@ class SimServer:
         fuse = self.fuse_window
         if self.autotune_cache and swap is not None:
             # persistent-cache-backed fuse-window choice for this bucket:
-            # warm processes read the tuned window from disk and measure
-            # nothing (MEASURE_COUNT stays put)
+            # cold processes rank the fuse candidates with the cost model
+            # and measure only the tune_top_k cheapest; warm processes read
+            # the tuned window from disk and measure nothing
+            # (MEASURE_COUNT stays put)
             grids = {g: st.grid(st.f32, bucket, k.info.order).randomize(i)
                      for i, g in enumerate(k.ir.grid_params)}
             res = _at.tune(k, grids, iters=1, space=[st.xla()], swap=swap,
                            steps=self.tune_steps,
                            fuse_space=self.tune_fuse_space,
                            time_block_space=(1,),
-                           cache_dir=self.autotune_cache)
+                           cache_dir=self.autotune_cache,
+                           top_k=self.tune_top_k,
+                           cost_model=self.tune_cost_model)
             fuse = max(1, int(res.fuse_steps))
         halos = {g: (k.info.order,) * k.info.ndim for g in k.ir.grid_params}
         eng = _tl.TimeloopEngine(k.ir, halos, bucket, st.xla(), swap=swap,

@@ -131,3 +131,109 @@ def test_fingerprint_and_bucket_helpers():
     assert fp != at.kernel_fingerprint(suite.get_kernel("star2d2r"))
     assert at.shape_bucket((12, 18)) == (16, 32)
     assert at.shape_bucket((3, 8, 513)) == (8, 8, 1024)
+
+
+def test_shape_bucket_edge_cases():
+    assert at.shape_bucket(()) == ()                     # 0-d
+    assert at.shape_bucket((1, 1)) == (8, 8)             # floor 8
+    assert at.shape_bucket((0,)) == (8,)                 # degenerate extent
+    assert at.shape_bucket((8,)) == (8,)                 # exact pow2 stays
+    assert at.shape_bucket((17, 100, 513)) == (32, 128, 1024)  # odd non-pow2
+
+
+def test_disk_key_distinguishes_dtype():
+    k = suite.get_kernel("star2d1r")
+
+    def key_for(dtype):
+        grids = {g: st.grid(dtype, (12, 18), k.info.order)
+                 for g in k.ir.grid_params}
+        return at._disk_key(k, grids, 1, SPACE, ("v", "u"), 4, FUSE, (1,),
+                            3)[0]
+
+    import numpy as np
+    assert key_for(np.float32) != key_for(np.float64)
+
+
+def test_disk_key_includes_top_k_and_calibration():
+    from repro.core import cost_model as cm
+    k = suite.get_kernel("star2d1r")
+    grids = {g: st.grid(st.f32, (12, 18), k.info.order)
+             for g in k.ir.grid_params}
+
+    def key_for(top_k):
+        return at._disk_key(k, grids, 1, SPACE, ("v", "u"), 4, FUSE, (1,),
+                            top_k)
+    d3, readable = key_for(3)
+    d_none, _ = key_for(None)
+    assert d3 != d_none
+    assert readable["calibration"] == cm.CALIBRATION_VERSION
+
+
+def test_purge_stale_removes_old_schema_entries(tmp_path):
+    _tune(tmp_path)
+    _tune(tmp_path, shape=(20, 20))
+    files = sorted(glob.glob(str(tmp_path / "tune-*.json")))
+    assert len(files) == 2
+    # age one entry to a pre-bump schema and corrupt nothing else
+    with open(files[0]) as f:
+        entry = json.load(f)
+    entry["schema"] = at.SCHEMA_VERSION - 1
+    with open(files[0], "w") as f:
+        json.dump(entry, f)
+    assert at.purge_stale(str(tmp_path)) == 1
+    assert glob.glob(str(tmp_path / "tune-*.json")) == [files[1]]
+    # unreadable files purge too
+    with open(files[1], "w") as f:
+        f.write("{ not json")
+    assert at.purge_stale(str(tmp_path)) == 1
+    assert not glob.glob(str(tmp_path / "tune-*.json"))
+    assert at.purge_stale(str(tmp_path / "missing")) == 0
+
+
+def test_first_touch_purges_then_retunes(tmp_path):
+    _tune(tmp_path)
+    (path,) = glob.glob(str(tmp_path / "tune-*.json"))
+    with open(path) as f:
+        entry = json.load(f)
+    entry["schema"] = at.SCHEMA_VERSION - 1
+    with open(path, "w") as f:
+        json.dump(entry, f)
+    # a "new process" has not touched this directory yet
+    at.clear_cache()
+    at.reset_measure_count()
+    at._PURGED.discard(str(tmp_path))
+    _tune(tmp_path)
+    assert _measured() == len(SPACE) * len(FUSE)
+    # the stale file was purged, a fresh-schema entry replaced it
+    (path2,) = glob.glob(str(tmp_path / "tune-*.json"))
+    with open(path2) as f:
+        assert json.load(f)["schema"] == at.SCHEMA_VERSION
+
+
+def test_disk_round_trip_preserves_search_stats(tmp_path):
+    from repro.core import cost_model as cm
+    k = suite.get_kernel("star2d1r")
+
+    def tune(top_k):
+        grids = {g: st.grid(st.f32, (12, 18), k.info.order).randomize(i)
+                 for i, g in enumerate(k.ir.grid_params)}
+        return at.tune(k, grids, iters=1,
+                       space=[st.xla(), st.pallas(template="gmem")],
+                       swap=("v", "u"), steps=4, fuse_space=(1, 2, 4),
+                       time_block_space=(1, 2), cache_dir=str(tmp_path),
+                       top_k=top_k, cost_model=cm.CostModel(calibrate=False))
+
+    cold = tune(3)
+    assert cold.pruned_candidates == 6 and cold.measured_candidates == 3
+    at.clear_cache()
+    at.reset_measure_count()
+    warm = tune(3)
+    assert _measured() == 0                       # pure disk hit
+    assert warm.pruned_candidates == cold.pruned_candidates
+    assert warm.measured_candidates == cold.measured_candidates
+    assert warm.rank_error == cold.rank_error
+    assert warm.top_k == 3
+    assert len(warm.predicted) == len(cold.predicted) == 9
+    got = [(b.cache_key(), f) for b, f, _ in warm.predicted]
+    want = [(b.cache_key(), f) for b, f, _ in cold.predicted]
+    assert got == want

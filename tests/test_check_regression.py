@@ -12,13 +12,21 @@ cr = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(cr)
 
 
-def _bench(star_speed, ac_speed, hbm_red):
+def _pvm(best_in_top_k=True, within=True, at_most=True):
+    return {kernel: {"best_in_top_k": best_in_top_k,
+                     "two_stage_within_10pct": within,
+                     "measured_at_most_top_k": at_most}
+            for kernel in ("star2d1r", "star3d4r")}
+
+
+def _bench(star_speed, ac_speed, hbm_red, pvm=None):
     return {
         "star2d1r": {"speedup": star_speed,
                      "fused_steps_per_s": 12345.0},
         "acoustic_iso_3d": {"speedup": ac_speed},
         "star2d1r_pallas": {
             "time_block_4": {"hbm_reduction_vs_time_block_1": hbm_red}},
+        "predicted_vs_measured": pvm if pvm is not None else _pvm(),
     }
 
 
@@ -59,3 +67,51 @@ def test_guard_threshold_override():
     failures, _ = cr.check(_bench(6.0, 2.4, 1.6), _bench(5.0, 2.4, 1.6),
                            threshold=0.05)
     assert len(failures) == 1 and "star2d1r.speedup" in failures[0]
+
+
+def test_cost_model_quality_guard_is_absolute():
+    """A cost model that misranks the measured-best out of the shortlist
+    must fail CI even when every timing ratio is fine — and threshold
+    overrides must not relax it."""
+    base = _bench(6.0, 2.4, 1.6)
+    bad = _bench(6.0, 2.4, 1.6,
+                 pvm=_pvm(best_in_top_k=False))
+    failures, _ = cr.check(base, bad)
+    assert len(failures) == 2   # both kernels
+    assert all("best_in_top_k" in f for f in failures)
+    failures, _ = cr.check(base, bad, threshold=10.0)
+    assert len(failures) == 2   # absolutes never relaxed
+
+
+def test_cost_model_guard_covers_all_flags():
+    base = _bench(6.0, 2.4, 1.6)
+    for flag, kw in (("two_stage_within_10pct", {"within": False}),
+                     ("measured_at_most_top_k", {"at_most": False})):
+        failures, _ = cr.check(base, _bench(6.0, 2.4, 1.6, pvm=_pvm(**kw)))
+        assert len(failures) == 2
+        assert all(flag in f for f in failures)
+
+
+def test_missing_predicted_vs_measured_fails():
+    """The quality guard must not silently vanish if the benchmark stops
+    emitting the section."""
+    fresh = _bench(6.0, 2.4, 1.6)
+    del fresh["predicted_vs_measured"]
+    failures, _ = cr.check(_bench(6.0, 2.4, 1.6), fresh)
+    assert len(failures) == 6
+
+
+def test_serve_guard_checks_cold_shortlist():
+    base = {"serve_stream": {"batched_vs_serial_speedup": 3.0},
+            "autotune_cache": {"warm": {"measured_candidates": 0},
+                               "cold": {"measured_at_most_top_k": True}}}
+    ok = {"serve_stream": {"batched_vs_serial_speedup": 2.9},
+          "autotune_cache": {"warm": {"measured_candidates": 0},
+                             "cold": {"measured_at_most_top_k": True}}}
+    failures, _ = cr.check(base, ok)
+    assert failures == []
+    bad = {"serve_stream": {"batched_vs_serial_speedup": 2.9},
+           "autotune_cache": {"warm": {"measured_candidates": 0},
+                              "cold": {"measured_at_most_top_k": False}}}
+    failures, _ = cr.check(base, bad)
+    assert len(failures) == 1 and "measured_at_most_top_k" in failures[0]

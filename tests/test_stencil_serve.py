@@ -203,3 +203,52 @@ def test_submit_validation():
         srv.submit("star2d1r", (4, 4), -1, {})
     with pytest.raises(ValueError):
         SimServer(batch_cap=0)
+
+
+def test_tuned_server_prunes_with_cost_model(tmp_path):
+    """Cold-start tuning measures only the tune_top_k shortlist; a warm
+    'process' reads the disk entry and measures nothing."""
+    from repro.core import autotune as at
+    from repro.core import cost_model as cm
+
+    k = suite.get_kernel("star2d1r")
+    rng = np.random.default_rng(0)
+    payload = {g: rng.standard_normal((12, 18)).astype(np.float32)
+               for g in k.ir.grid_params}
+
+    def serve_once():
+        at.clear_cache()
+        at.reset_measure_count()
+        srv = SimServer(batch_cap=2, autotune_cache=str(tmp_path),
+                        tune_top_k=2,
+                        tune_cost_model=cm.CostModel(calibrate=False))
+        srv.submit("star2d1r", (12, 18), 4, payload)
+        srv.run_until_drained()
+        return (at.MEASURE_COUNT["measured_candidates"],
+                at.MEASURE_COUNT["pruned_candidates"])
+
+    cold_measured, cold_pruned = serve_once()
+    # fuse space (1,2,4,8,16) at tune_steps=8 dedups to 4 candidates
+    assert cold_measured == 2
+    assert cold_pruned == 2
+    warm_measured, _ = serve_once()
+    assert warm_measured == 0
+
+
+def test_tuned_server_exhaustive_when_top_k_none(tmp_path):
+    from repro.core import autotune as at
+    from repro.core import cost_model as cm
+
+    at.clear_cache()
+    at.reset_measure_count()
+    k = suite.get_kernel("star2d1r")
+    rng = np.random.default_rng(0)
+    payload = {g: rng.standard_normal((12, 18)).astype(np.float32)
+               for g in k.ir.grid_params}
+    srv = SimServer(batch_cap=2, autotune_cache=str(tmp_path),
+                    tune_top_k=None,
+                    tune_cost_model=cm.CostModel(calibrate=False))
+    srv.submit("star2d1r", (12, 18), 4, payload)
+    srv.run_until_drained()
+    assert at.MEASURE_COUNT["measured_candidates"] == 4
+    assert at.MEASURE_COUNT["pruned_candidates"] == 0

@@ -593,3 +593,85 @@ def test_autotune_searches_fuse_steps():
         lambda u, v: st.timeloop(4, swap=("v", "u"))(k)(u, v))(
         g2["u"], g2["v"])
     autotune.clear_cache()
+
+
+def test_launch_autotune_picks_backend_and_fuse():
+    """st.launch(autotune=True) replaces the fixed backend with the tuned
+    winner and applies the tuned window when fuse is unspecified."""
+    autotune.clear_cache()
+    autotune.reset_measure_count()
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+
+    def tgt(u, v):
+        return st.timeloop(8, swap=("v", "u"))(k)(u, v)
+
+    run = st.launch(autotune=True, autotune_space=[st.xla()],
+                    autotune_steps=4, autotune_fuse_space=(1, 4),
+                    autotune_time_block_space=(1,))
+    res = run(tgt)(grids["u"], grids["v"])
+    # 2 candidates <= default top_k=3: no pruning, both measured
+    assert autotune.MEASURE_COUNT["measured_candidates"] == 2
+    assert autotune.MEASURE_COUNT["pruned_candidates"] == 0
+    assert res.value.fuse_steps in (1, 4, 8)
+    # a second launch hits the in-process tune cache
+    g2 = _mk_grids("star2d1r")
+    run(tgt)(g2["u"], g2["v"])
+    assert autotune.MEASURE_COUNT["measured_candidates"] == 2
+    autotune.clear_cache()
+
+
+def test_launch_autotune_prunes_with_injected_model():
+    from repro.core import cost_model as cm
+    autotune.clear_cache()
+    autotune.reset_measure_count()
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+
+    def tgt(u, v):
+        return st.timeloop(8, swap=("v", "u"))(k)(u, v)
+
+    run = st.launch(autotune=True,
+                    autotune_space=[st.xla(), st.pallas(template="gmem")],
+                    autotune_top_k=2, autotune_steps=4,
+                    autotune_fuse_space=(1, 2, 4),
+                    autotune_time_block_space=(1, 2),
+                    autotune_cost_model=cm.CostModel(calibrate=False))
+    run(tgt)(grids["u"], grids["v"])
+    # 9 candidates, shortlist of 2
+    assert autotune.MEASURE_COUNT["measured_candidates"] == 2
+    assert autotune.MEASURE_COUNT["pruned_candidates"] == 7
+    autotune.clear_cache()
+
+
+def test_launch_autotune_explicit_fuse_wins():
+    autotune.clear_cache()
+    k = suite.get_kernel("star2d1r")
+    grids = _mk_grids("star2d1r")
+
+    def tgt(u, v):
+        return st.timeloop(8, swap=("v", "u"), fuse_steps=2)(k)(u, v)
+
+    run = st.launch(autotune=True, autotune_space=[st.xla()],
+                    autotune_steps=4, autotune_fuse_space=(1, 4),
+                    autotune_time_block_space=(1,))
+    res = run(tgt)(grids["u"], grids["v"])
+    assert res.value.fuse_steps == 2   # timeloop's own fuse overrides
+    autotune.clear_cache()
+
+
+def test_launch_autotune_skips_batched_timeloop():
+    """Batched grids fall through to the fixed backend unchanged."""
+    autotune.clear_cache()
+    autotune.reset_measure_count()
+    k = suite.get_kernel("star2d1r")
+    grids = {g: st.grid(st.f32, (8, 8), k.info.order, batch=2).randomize(i)
+             for i, g in enumerate(k.ir.grid_params)}
+
+    def tgt(u, v):
+        return st.timeloop(4, swap=("v", "u"))(k)(u, v)
+
+    run = st.launch(autotune=True, autotune_space=[st.xla()])
+    run(tgt)(grids["u"], grids["v"])
+    assert autotune.MEASURE_COUNT["measured_candidates"] == 0
+    autotune.clear_cache()

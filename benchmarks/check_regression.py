@@ -35,7 +35,12 @@ candidates — booleans computed in-run, machine-independent);
 speedup plus the absolute invariants of the persistent autotune cache —
 a warm cache must serve with **zero** measured candidates and a cold
 one must measure at most its top-K shortlist (threshold overrides never
-relax absolutes).
+relax absolutes); ``BENCH_distributed.json`` guards the same-run
+fused-vs-per-window speedup of the sharded timeloop, the absolute
+collective-model and mesh-tuning booleans, and — a third category — the
+**exact** deterministic series: ``HaloSpec``-modeled collective bytes
+depend only on geometry, so baseline and fresh must agree to the byte
+(any drift means the exchange schedule itself changed).
 
     python -m benchmarks.check_regression baseline.json fresh.json
 """
@@ -79,12 +84,39 @@ ABSOLUTE_TIMELOOP = tuple(
     for flag in ("best_in_top_k", "two_stage_within_10pct",
                  "measured_at_most_top_k"))
 
+GUARDED_DISTRIBUTED = (
+    # one program per window vs one dispatch per exchange group,
+    # measured back-to-back in the same subprocess
+    ("fused_vs_per_window.speedup", 0.50),
+)
+
+#: in-run booleans of the distributed benchmark: the HLO cross-check of
+#: the collective-traffic model and the mesh-aware two-stage tuner
+ABSOLUTE_DISTRIBUTED = tuple(
+    (f"collective_model.{combo}.match", True)
+    for combo in ("w4_d2", "w5_d2", "w6_d3")
+) + (
+    ("predicted_vs_measured_mesh.best_in_top_k", True),
+    ("predicted_vs_measured_mesh.measured_at_most_top_k", True),
+    ("predicted_vs_measured_mesh.distributed_pruning_active", True),
+)
+
+#: deterministic series compared EXACTLY between baseline and fresh —
+#: the modeled collective bytes are pure geometry (no timing), so any
+#: difference is a real change to the exchange schedule
+EXACT_DISTRIBUTED = tuple(
+    f"scaling.{mode}.{n}.modeled_collective_bytes_per_window"
+    for mode in ("strong", "weak") for n in (1, 2, 4, 8))
+
 
 def _guards_for(fresh: dict):
-    """(ratio guards, absolute guards) for the benchmark kind of a file."""
+    """(ratio, absolute, exact) guard sets for the benchmark kind of a
+    file, auto-detected from its top-level keys."""
     if "serve_stream" in fresh:
-        return GUARDED_SERVE, ABSOLUTE_SERVE
-    return GUARDED_TIMELOOP, ABSOLUTE_TIMELOOP
+        return GUARDED_SERVE, ABSOLUTE_SERVE, ()
+    if "fused_vs_per_window" in fresh:
+        return GUARDED_DISTRIBUTED, ABSOLUTE_DISTRIBUTED, EXACT_DISTRIBUTED
+    return GUARDED_TIMELOOP, ABSOLUTE_TIMELOOP, ()
 
 
 def _get(d: dict, path: str):
@@ -100,9 +132,9 @@ def check(baseline: dict, fresh: dict, threshold: float = None):
     """Return (failures, notes) comparing guarded ratio series (and, for
     the serving benchmark, exact counter invariants on the fresh file).
     ``threshold`` overrides every per-series ratio tolerance when not
-    None; absolute checks are never relaxed."""
+    None; absolute and exact checks are never relaxed."""
     failures, notes = [], []
-    guarded, absolute = _guards_for(fresh)
+    guarded, absolute, exact = _guards_for(fresh)
     for path, tol in guarded:
         if threshold is not None:
             tol = threshold
@@ -124,6 +156,19 @@ def check(baseline: dict, fresh: dict, threshold: float = None):
         line = f"{path}: fresh {f!r} (required {want!r})"
         if f is None or f != want:
             failures.append(line)
+        else:
+            notes.append(line)
+    for path in exact:
+        b = _get(baseline, path)
+        f = _get(fresh, path)
+        if b is None or f is None:
+            notes.append(f"skip {path}: missing "
+                         f"(baseline={b!r}, fresh={f!r})")
+            continue
+        line = f"{path}: baseline {b!r} == fresh {f!r} (exact)"
+        if b != f:
+            failures.append(f"{path}: baseline {b!r} != fresh {f!r} "
+                            f"(deterministic series must match exactly)")
         else:
             notes.append(line)
     return failures, notes

@@ -75,11 +75,22 @@ def main(argv=None):
     print(f"csv,productivity_min_leverage,"
           f"{min(r['leverage'] for r in pr)}")
 
-    _hdr("Distributed stencil (beyond-paper: halo-exchange runtime)")
+    _hdr("Distributed stencil (fused sharded timeloop; BENCH_distributed.json)")
     from benchmarks import distributed_stencil
     ds = distributed_stencil.run(fast=args.fast)
-    for r in ds:
-        print(f"csv,dist_{r['name']},{r['seconds']:.3f}")
+    fw = ds["fused_vs_per_window"]
+    print(f"csv,dist_fused_vs_per_window_speedup,{fw['speedup']:.2f}")
+    print(f"csv,dist_fused_steps_per_s,{fw['fused_steps_per_s']:.1f}")
+    for mode in ("strong", "weak"):
+        for n, row in sorted(ds["scaling"][mode].items(),
+                             key=lambda kv: int(kv[0])):
+            print(f"csv,dist_{mode}_{n}dev_steps_per_s,"
+                  f"{row['steps_per_s']:.1f}")
+    print(f"csv,dist_collective_model_match,"
+          f"{int(all(r['match'] for r in ds['collective_model'].values()))}")
+    pvm = ds["predicted_vs_measured_mesh"]
+    print(f"csv,dist_pvm_measured,{pvm['measured_candidates']}")
+    print(f"csv,dist_pvm_pruned,{pvm['pruned_candidates']}")
 
     _hdr("Stencil-template roofline (BlockSpec traffic model, §Perf)")
     from benchmarks import stencil_roofline

@@ -27,9 +27,12 @@ for each distinct configuration once.
 ``top_k`` candidates, every candidate is first *ranked* by the
 analytical cost model (``core/cost_model.py`` — modeled HBM traffic over
 a calibrated roofline, no compilation) and only the ``top_k`` cheapest
-predicted are measured; candidates the model cannot predict (e.g.
-distributed backends) are always measured.  ``top_k=None`` recovers the
-exhaustive search.  ``TuneResult`` records the predictions, the
+predicted are measured; candidates the model cannot predict are always
+measured.  Distributed candidates are predictable (and hence prunable)
+when the tuner is given the mesh (``tune(..., mesh=...)`` — compute at
+the local shard shape plus ``HaloSpec`` collective bytes over the link
+rate); without a mesh they stay unpredictable and are always measured.
+``top_k=None`` recovers the exhaustive search.  ``TuneResult`` records the predictions, the
 pruned-candidate count, and the predicted rank of the measured winner
 (``rank_error`` — 0 means the model's first choice won), and the disk
 cache persists all three so ``benchmarks/check_regression.py`` can guard
@@ -405,7 +408,7 @@ def _normalize_space(space, ndim, interior, swap, steps, fuse_space,
 
 
 def _measure(kernel: st.Kernel, grids: Dict[str, st.grid], backend,
-             iters: int) -> float:
+             iters: int, mesh=None) -> float:
     """Median wall time of ``iters`` kernel applications (excludes the
     one-time codegen+compile warmup, like the paper's Kernel column)."""
     gs = {n: g.copy() for n, g in grids.items()}
@@ -414,7 +417,7 @@ def _measure(kernel: st.Kernel, grids: Dict[str, st.grid], backend,
     def tgt(*args):
         st.map(e=args[0].shape)(kernel)(*args)
 
-    run = st.launch(backend=backend)
+    run = st.launch(backend=backend, mesh=mesh)
     args = tuple(gs.values())
     try:
         run(tgt)(*args)                      # warmup: codegen + compile
@@ -428,14 +431,15 @@ def _measure(kernel: st.Kernel, grids: Dict[str, st.grid], backend,
 
 
 def _measure_timeloop(kernel: st.Kernel, grids: Dict[str, st.grid],
-                      backend, fuse: int, steps: int, swap, iters: int) -> float:
+                      backend, fuse: int, steps: int, swap, iters: int,
+                      mesh=None) -> float:
     """Median wall time-to-solution of ``steps`` fused time steps."""
     gs = {n: g.copy() for n, g in grids.items()}
 
     def tgt(*args):
         return st.timeloop(steps, swap=swap, fuse_steps=fuse)(kernel)(*args)
 
-    run = st.launch(backend=backend)
+    run = st.launch(backend=backend, mesh=mesh)
     args = tuple(gs.values())
     try:
         run(tgt)(*args)                      # warmup: codegen + compile
@@ -484,7 +488,8 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
          time_block_space: Sequence[int] = (1, 2, 4),
          cache_dir: Optional[str] = None,
          top_k: Optional[int] = 3,
-         cost_model: Optional[_cost.CostModel] = None) -> TuneResult:
+         cost_model: Optional[_cost.CostModel] = None,
+         mesh=None) -> TuneResult:
     """Search the backend (and, with ``swap``, the fusion window) —
     two-stage: predict with the analytical cost model, measure a
     shortlist.
@@ -504,6 +509,11 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     explicit ``cost_model`` computes predictions even when nothing is
     pruned — how the benchmarks obtain full predicted-vs-measured data.
 
+    ``mesh`` — the device mesh distributed candidates in ``space`` run
+    (and are *priced*) on; threaded into both the cost-model prediction
+    and the measurement launches.  Mesh-tuned results stay in the
+    in-process cache only (live device references are not persisted).
+
     ``cache_dir`` (or ``$REPRO_AUTOTUNE_CACHE``) enables the persistent
     on-disk cache: a miss in the in-process layer consults the disk entry
     for this (kernel fingerprint, shape bucket, configuration, top_k,
@@ -515,6 +525,8 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     if top_k is not None and int(top_k) < 1:
         raise ValueError(f"top_k must be >= 1 or None (got {top_k})")
     g0 = next(iter(grids.values()))
+    mesh_desc = (tuple(sorted(dict(mesh.shape).items()))
+                 if mesh is not None else None)
     key = (kernel.name,
            tuple(sorted((n, g.shape, g.order, str(g.dtype))
                         for n, g in grids.items())),
@@ -523,12 +535,16 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
            int(steps) if swap else None,
            tuple(int(f) for f in fuse_space) if swap else None,
            tuple(int(t) for t in time_block_space) if swap else None,
-           int(top_k) if top_k is not None else None)
+           int(top_k) if top_k is not None else None,
+           mesh_desc)
     if key in _CACHE:
         return _CACHE[key]
     cdir = cache_dir or cache_dir_from_env()
     digest = readable = None
-    if cdir:
+    # the disk key carries no mesh descriptor; mesh-tuned results skip the
+    # disk layer entirely (they hold live device references anyway)
+    use_disk = cdir and mesh is None
+    if use_disk:
         if cdir not in _PURGED:
             _PURGED.add(cdir)
             purge_stale(cdir)
@@ -551,7 +567,8 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
         cm = cost_model or _cost.default_model(cdir)
         for backend, fuse in cands:
             try:
-                p = cm.predict(kernel, grids, backend, fuse, steps, swap)
+                p = cm.predict(kernel, grids, backend, fuse, steps, swap,
+                               mesh=mesh)
             except Exception:
                 p = None
             preds.append(p)
@@ -570,10 +587,10 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
     for i in measure_idx:
         backend, fuse = cands[i]
         if swap is None:
-            dt = _measure(kernel, grids, backend, iters)
+            dt = _measure(kernel, grids, backend, iters, mesh=mesh)
         else:
             dt = _measure_timeloop(kernel, grids, backend, fuse, steps,
-                                   swap, iters)
+                                   swap, iters, mesh=mesh)
         MEASURE_COUNT["measured_candidates"] += 1
         trials.append((backend, fuse, dt))
         if verbose:
@@ -599,6 +616,6 @@ def tune(kernel: st.Kernel, grids: Dict[str, st.grid], iters: int = 3,
                         rank_error=rank_error,
                         top_k=int(top_k) if top_k is not None else None)
     _CACHE[key] = result
-    if cdir:
+    if use_disk:
         _disk_store(cdir, digest, readable, result)
     return result

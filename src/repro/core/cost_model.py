@@ -39,6 +39,17 @@ The model's job is *ranking*, not absolute prediction: the calibrated
 the monotone window-overhead term, are what ``autotune.tune``'s two-stage
 search prunes with.  ``benchmarks/timeloop.py`` records predicted-vs-
 measured rank quality and CI guards it (``check_regression.py``).
+
+Distributed candidates are priced when the caller supplies the mesh
+(``predict(..., mesh=...)``): the per-shard compute term reuses the XLA
+byte accounting at the *local* shard shape (the fused sharded window runs
+its sub-steps through the same ``lower_jax`` regions — a Pallas ``inner``
+only changes exchange depth), and the collective term charges
+``halo.HaloSpec.window_collective_bytes`` — the exact per-window ppermute
+traffic of ``distributed.lower_distributed_window`` — against the
+``"link"`` rate (never probed on a host-device mesh; ``DEFAULT_RATES``
+applies) plus one link overhead per exchange group.  Without a mesh the
+prediction stays ``None`` (geometry unknown → the tuner measures).
 """
 from __future__ import annotations
 
@@ -54,7 +65,9 @@ import jax
 import numpy as np
 
 from . import dsl as st
+from . import halo as _halo
 from . import lowering as _lowering
+from . import timeloop as _tl
 from repro.launch import hlo_analysis as _hlo
 
 __all__ = ["CALIBRATION_VERSION", "Rate", "DEFAULT_RATES", "CostModel",
@@ -91,9 +104,11 @@ def kernel_fingerprint(kernel: st.Kernel) -> str:
 
 def exec_key(backend) -> Optional[str]:
     """Calibration class of a backend — which measured rate applies.
-    ``None`` means the model cannot predict this backend (e.g.
-    distributed, whose cost is mesh-dependent); the tuner always
-    measures such candidates."""
+    ``None`` means the backend has no single-device execution class:
+    distributed cost is mesh-dependent, so ``predict`` prices it only
+    when given the mesh (compute at the local shape over the xla rate +
+    collectives over the ``"link"`` rate) and the tuner measures it
+    otherwise."""
     kind = getattr(backend, "kind", None)
     if kind == "xla":
         return "xla"
@@ -118,6 +133,13 @@ DEFAULT_RATES: Dict[str, Rate] = {
     "xla": Rate(bytes_per_s=2e9, overhead_s=2e-4),
     "pallas": Rate(bytes_per_s=2e9, overhead_s=2e-4),
     "pallas_interpret": Rate(bytes_per_s=2e6, overhead_s=2e-3),
+    # inter-shard halo-exchange traffic: bandwidth per ppermute byte plus
+    # a fixed latency per exchange *group* (one exchange round).  There is
+    # no probe for this class (``_PROBE`` has no entry → ``rate_for``
+    # falls through here); the ranking-relevant property is that link
+    # bytes are slower and rounds far more expensive than local HBM, so
+    # deeper time skewing (fewer, wider exchanges) predicts cheaper.
+    "link": Rate(bytes_per_s=1e9, overhead_s=5e-4),
 }
 
 
@@ -314,11 +336,18 @@ class CostModel:
     # -- prediction --------------------------------------------------------
     def predict(self, kernel: st.Kernel, grids: Dict[str, st.grid],
                 backend, fuse: int, steps: int,
-                swap: Optional[Tuple[str, str]]) -> Optional[float]:
+                swap: Optional[Tuple[str, str]],
+                mesh=None) -> Optional[float]:
         """Predicted seconds for the quantity the tuner measures: ``steps``
         fused time steps (or one application when ``swap`` is None).
         ``None`` — unpredictable backend; ``inf`` — infeasible candidate.
+        ``mesh`` (a ``jax.sharding.Mesh`` or an {axis: size} mapping)
+        makes distributed candidates predictable; without it they stay
+        ``None`` and are always measured.
         """
+        if getattr(backend, "kind", None) == "distributed":
+            return self._predict_distributed(kernel, grids, backend, fuse,
+                                             steps, swap, mesh)
         key = exec_key(backend)
         if key is None:
             return None
@@ -340,6 +369,59 @@ class CostModel:
         windows = -(-steps // max(1, int(fuse)))
         traffic = batch * (steps * per_step + windows * per_window)
         return traffic / rate.bytes_per_s + windows * rate.overhead_s
+
+    def _predict_distributed(self, kernel, grids, backend, fuse, steps,
+                             swap, mesh) -> Optional[float]:
+        """Price a distributed candidate on a known mesh: per-shard compute
+        bytes at the local shape over the xla rate (the fused window's
+        sub-steps run through ``lower_jax``) + per-window ``HaloSpec``
+        collective bytes over the link rate + one link overhead per
+        exchange group.  Mirrors ``distributed.lower_distributed_window``'s
+        schedule; infeasible geometry (indivisible mesh, k·h too deep for
+        the shard) predicts ``inf`` like a failed compile would measure."""
+        if mesh is None:
+            return None
+        mesh_shape = (dict(mesh.shape) if hasattr(mesh, "shape")
+                      else dict(mesh))
+        g0 = next(iter(grids.values()))
+        interior = tuple(g0.shape)
+        batch = max(1, int(g0.batch or 1))
+        halos = {n: tuple(g.halo) for n, g in grids.items()}
+        itemsize = np.dtype(g0.dtype).itemsize
+        steps = max(1, int(steps))
+        if swap is None:
+            # the tuner measures a single application for swap-less targets
+            steps, window, windows = 1, 1, 1
+            depth = 1
+        else:
+            window = min(max(1, int(fuse)), steps)
+            windows = -(-steps // window)
+            depth = min(backend.time_steps * _tl.backend_time_block(backend),
+                        window)
+        h_max = max((h for hs in halos.values() for h in hs), default=0)
+        if h_max == 0:
+            depth = 1
+        try:
+            spec = _halo.HaloSpec.build(halos, backend.grid_axes, interior,
+                                        mesh_shape, depth=depth, swap=swap)
+        except ValueError:
+            return float("inf")
+        sb = self.step_bytes(kernel, halos, spec.local_shape, st.xla(),
+                             swap, g0.dtype)
+        if sb is None:
+            return None
+        per_step, _ = sb
+        if not math.isfinite(per_step):
+            return float("inf")
+        crate = self.rate_for("xla", g0.dtype)
+        lrate = self.rate_for("link", g0.dtype)
+        coll_w = spec.window_collective_bytes(window, itemsize, batch=batch)
+        groups_w = sum(c for c, _d in spec.group_depths(window))
+        compute = (batch * steps * per_step / crate.bytes_per_s
+                   + windows * crate.overhead_s)
+        comm = windows * (coll_w / lrate.bytes_per_s
+                          + groups_w * lrate.overhead_s)
+        return compute + comm
 
 
 # -- shared default models (one calibration per process per cache dir) -----

@@ -19,6 +19,13 @@ Design
 * The per-shard compute reuses the single-device lowerings (XLA or Pallas),
   so ``distributed(inner=pallas(...))`` composes the paper's templates with
   the pod-level decomposition.
+* The fused engine path (``lower_distributed_window``) goes further: the
+  ENTIRE fusion window — halo exchange, boundary bands, interior compute
+  and the leapfrog swap for every step — lives inside ONE jitted
+  shard_map'd ``lax.fori_loop``, so a window costs a single program
+  dispatch and the latency-hiding scheduler overlaps each group's
+  ppermutes with the deep-interior pre-pass across steps, not just
+  within one.  All exchange geometry comes from ``core.halo.HaloSpec``.
 
 Halo traffic per step per shard is ``h · (local surface)`` — the classic
 reason stencils scale to thousands of nodes: the collective term shrinks
@@ -37,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import analysis, ir, lowering
+from . import halo as _halo
 from . import timeloop as _tl
 
 
@@ -85,25 +93,16 @@ def lower_distributed(kernel: ir.StencilIR,
     info = analysis.analyze(kernel)
     ndim = kernel.ndim
     grid_axes = tuple(backend.grid_axes)
-    if len(grid_axes) != ndim:
-        raise ValueError(f"grid_axes must have {ndim} entries")
-    for ax, m in enumerate(grid_axes):
-        if m is None:
-            continue
-        if interior_shape[ax] % mesh.shape[m]:
-            raise ValueError(
-                f"domain axis {ax} ({interior_shape[ax]}) not divisible by "
-                f"mesh axis '{m}' ({mesh.shape[m]})")
-
-    local_shape = tuple(
-        s // (mesh.shape[m] if m else 1)
-        for s, m in zip(interior_shape, grid_axes))
-
     in_grids = info.input_grids
     out_grids = info.output_grids
     all_grids = tuple(kernel.grid_params)
     gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in all_grids}
     kernel_halos = {g: gh[g] for g in all_grids}
+
+    # geometry + validation (divisibility, axis mapping) via HaloSpec
+    spec = _halo.HaloSpec.build(gh, grid_axes, interior_shape,
+                                dict(mesh.shape), depth=1)
+    local_shape = spec.local_shape
 
     _k_inner = _tl.backend_time_block(backend)
     if (getattr(backend, "time_steps", 1) > 1
@@ -236,6 +235,7 @@ def lower_distributed(kernel: ir.StencilIR,
     fn.mesh = mesh
     fn.partition_spec = specs
     fn.local_shape = local_shape
+    fn.spec = spec
     return fn
 
 
@@ -267,27 +267,19 @@ def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
     if swap is None:
         raise ValueError("time_steps > 1 requires swap=(older, newer)")
     ndim = kernel.ndim
-    h_max = max(info.halo) if info.halo else 0
-    if h_max == 0:
-        raise ValueError("time skewing needs a nonzero stencil halo")
     all_grids = tuple(kernel.grid_params)
     out_grids = info.output_grids
     if len(out_grids) != 1 or out_grids[0] != swap[0]:
         raise ValueError("time skewing supports single-output kernels "
                          "writing swap[0]")
 
-    # uniform padded indexing: decomposed axes exchange (k−1)·h_max + h_g
-    # wide slabs; non-decomposed axes zero-pad the same width (the global
-    # zero grid-halo).  The swap pair must share geometry (they trade
-    # buffers between steps) → both get the full k·h_max.
-    ext = {g: tuple((k - 1) * h_max + gh[g][ax] for ax in range(ndim))
-           for g in all_grids}
-    for g in swap:
-        ext[g] = (k * h_max,) * ndim
-    for ax, m in enumerate(grid_axes):
-        if m and k * h_max > local_shape[ax]:
-            raise ValueError("k·h halo exceeds local extent; reduce "
-                             "time_steps or mesh split")
+    # the whole exchange geometry — pad widths ((k−1)·h_max + h_g per
+    # coefficient axis, uniform k·h_max for the swap pair), feasibility
+    # (k·h ≤ local extent), zero-fill axes — is HaloSpec's job
+    spec = _halo.HaloSpec.build(gh, grid_axes, interior_shape,
+                                dict(mesh.shape), depth=k, swap=swap)
+    h_max = spec.h_max
+    ext = {g: spec.ext_of(g) for g in all_grids}
 
     def pad_wide(local_arrays):
         padded = {}
@@ -333,12 +325,8 @@ def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
         padded = {g: zero_outside_global(a, g) for g, a in padded.items()}
         older, newer = swap
         for i in range(k):
-            mshell = (k - 1 - i) * h_max
-            region = tuple(
-                (-mshell, local_shape[ax] + mshell) if grid_axes[ax]
-                else (0, local_shape[ax])
-                for ax in range(ndim))
-            step_fn = lowering.lower_jax(kernel, ext, local_shape, region)
+            step_fn = lowering.lower_jax(kernel, ext, local_shape,
+                                         spec.step_region(i))
             out = step_fn(padded, scalars)
             new_field = zero_outside_global(out[older], older)
             padded = dict(padded)
@@ -383,4 +371,257 @@ def _lower_time_skewed(kernel, info, interior_shape, backend, mesh,
     fn.mesh = mesh
     fn.partition_spec = specs
     fn.local_shape = local_shape
+    fn.spec = spec
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# fused sharded timeloop: ONE program per fusion window
+# ---------------------------------------------------------------------------
+def lower_distributed_window(kernel: ir.StencilIR,
+                             interior_shape: Tuple[int, ...],
+                             backend,
+                             mesh: Optional[Mesh],
+                             swap: Tuple[str, str],
+                             window: int,
+                             batch: int = 0):
+    """Build ``fn(arrays, scalars) -> arrays`` advancing ``window``
+    leapfrog steps in ONE jitted shard_map'd program.
+
+    The window decomposes into depth-``k`` exchange groups
+    (``k = time_steps × inner time_block``; ``HaloSpec.group_depths``):
+    ``window // k`` identical groups run as a ``lax.fori_loop`` plus one
+    unrolled remainder group — all inside the same XLA program, so a
+    window pays a single dispatch instead of one per exchange.  Within a
+    group the swap pair exchanges ONE k·h_max-wide halo and then runs k
+    kernel applications on shrinking regions; the first application's
+    deep interior (``HaloSpec.deep_interior``) is computed from
+    local-only, zero-padded data *before* the exchanged slabs are
+    consumed, so XLA's latency-hiding scheduler overlaps the ppermutes
+    with interior compute, and only the boundary bands
+    (``HaloSpec.boundary_bands``) wait for the network.  Coefficient
+    grids are exchanged ONCE per window (their slabs are wide enough for
+    every group) and carried through the loop as invariants.
+
+    ``batch > 0`` runs B independent scenarios as a leading unsharded
+    axis: grids are ``(B, *spatial)`` sharded ``P(None, *grid_axes)``,
+    scalars are replicated ``(B,)`` arrays, and every per-shard step
+    function is vmapped over the scenario axis — one program advances
+    the whole batch on the whole mesh.
+
+    Per-shard sub-steps run through the XLA shrinking-region lowering
+    regardless of a Pallas ``inner`` — the inner's ``time_block`` sets
+    exchange *depth* (geometry), matching the existing time-skewed path.
+    Global grid halos are zero, re-imposed between fused steps at mesh
+    edges.  Exchange geometry/traffic live on ``fn.spec`` (a
+    ``core.halo.HaloSpec``) for the cost model and tests.
+    """
+    if mesh is None:
+        raise ValueError("distributed backend requires launch(mesh=...)")
+    if swap is None:
+        raise ValueError("the distributed timeloop requires "
+                         "swap=(older, newer)")
+    info = analysis.analyze(kernel)
+    ndim = kernel.ndim
+    grid_axes = tuple(backend.grid_axes)
+    if len(grid_axes) != ndim:
+        raise ValueError(f"grid_axes must have {ndim} entries")
+    all_grids = tuple(kernel.grid_params)
+    out_grids = info.output_grids
+    if len(out_grids) != 1 or out_grids[0] != swap[0]:
+        raise ValueError("the distributed timeloop supports single-output "
+                         "kernels writing swap[0]")
+    gh = {g: info.halo_per_grid.get(g, (0,) * ndim) for g in all_grids}
+    window = int(window)
+    if window < 1:
+        raise ValueError("window must be >= 1")
+    mesh_shape = dict(mesh.shape)
+
+    h_max = max((h for hs in gh.values() for h in hs), default=0)
+    depth = backend.time_steps * _tl.backend_time_block(backend)
+    if h_max == 0:
+        if depth > 1:
+            raise ValueError("time skewing needs a nonzero stencil halo")
+        depth = 1
+    depth = min(depth, window)
+    spec = _halo.HaloSpec.build(gh, grid_axes, interior_shape, mesh_shape,
+                                depth=depth, swap=swap)   # validates
+    local_shape = spec.local_shape
+    groups = spec.group_depths(window)
+    older, newer = swap
+    coeffs = tuple(g for g in all_grids if g not in (older, newer))
+    ext_main = {g: spec.ext_of(g) for g in all_grids}
+    off = 1 if batch else 0
+
+    def maybe_vmap(f):
+        return jax.vmap(f, in_axes=(0, 0)) if batch else f
+
+    def pad_exchanged(arr, widths):
+        """Axis-by-axis halo pad: real ppermute slabs on decomposed axes,
+        zeros elsewhere (the global zero grid-halo)."""
+        for ax in range(ndim):
+            e = widths[ax]
+            if e == 0:
+                continue
+            m = grid_axes[ax]
+            if m:
+                lh, rh = _halo_exchange(arr, ax + off, m, e, mesh)
+            else:
+                zshape = list(arr.shape)
+                zshape[ax + off] = e
+                lh = jnp.zeros(zshape, arr.dtype)
+                rh = lh
+            arr = jnp.concatenate([lh, arr, rh], axis=ax + off)
+        return arr
+
+    def pad_zero(arr, widths):
+        pads = [(0, 0)] * off + [(w, w) for w in widths]
+        return jnp.pad(arr, pads)
+
+    def zero_outside_global(arr, widths):
+        """Re-impose the zero grid-halo beyond the global boundary on edge
+        shards, so shells 'computed' there never leak into later steps."""
+        for ax in range(ndim):
+            m = grid_axes[ax]
+            e = widths[ax]
+            if not m or e == 0:
+                continue
+            idx = lax.axis_index(m)
+            n = mesh_shape[m]
+            extent = arr.shape[ax + off]
+            coord = jnp.arange(extent)
+            keep = (((idx > 0) | (coord >= e))
+                    & ((idx < n - 1) | (coord < extent - e)))
+            shape = [1] * arr.ndim
+            shape[ax + off] = extent
+            arr = arr * keep.reshape(shape).astype(arr.dtype)
+        return arr
+
+    def crop_local(arr, widths):
+        idx = ((slice(None),) * off
+               + tuple(slice(widths[ax], widths[ax] + local_shape[ax])
+                       for ax in range(ndim)))
+        return arr[idx]
+
+    def reg_idx(widths, region):
+        return ((slice(None),) * off
+                + tuple(slice(w + b, w + e)
+                        for w, (b, e) in zip(widths, region)))
+
+    use_overlap = bool(getattr(backend, "overlap", True)) \
+        and spec.overlap_feasible()
+
+    def group_fns(d):
+        """Step/pre/band functions of one depth-d exchange group."""
+        sub = spec if d == spec.depth else spec.with_depth(d)
+        # remainder groups keep reading the window-wide coefficient pads
+        exts = {g: ext_main[g] for g in coeffs}
+        for g in (older, newer):
+            exts[g] = sub.ext_of(g)
+        step_fns = [maybe_vmap(lowering.lower_jax(kernel, exts, local_shape,
+                                                  sub.step_region(i)))
+                    for i in range(d)]
+        pre_fn = None
+        band_fns = []
+        if use_overlap:
+            pre_fn = maybe_vmap(lowering.lower_jax(kernel, gh, local_shape,
+                                                   sub.deep_interior()))
+            band_fns = [(maybe_vmap(lowering.lower_jax(
+                            kernel, exts, local_shape, breg)), breg)
+                        for breg in sub.boundary_bands()]
+        return sub, exts, step_fns, pre_fn, band_fns
+
+    def run_group(carry, pcoeffs, zcoeffs, scalars, fns):
+        sub, exts, step_fns, pre_fn, band_fns = fns
+        ew = exts[older]
+        padded = dict(pcoeffs)
+        for g in (older, newer):
+            padded[g] = zero_outside_global(
+                pad_exchanged(carry[g], exts[g]), exts[g])
+        for i, step_fn in enumerate(step_fns):
+            if i == 0 and pre_fn is not None:
+                # deep interior from local-only data — no dependency on the
+                # ppermutes above, so the scheduler overlaps them with this
+                pre_in = dict(zcoeffs)
+                pre_in[older] = pad_zero(carry[older], gh[older])
+                pre_in[newer] = pad_zero(carry[newer], gh[newer])
+                pre_out = pre_fn(pre_in, scalars)[older]
+                deep = sub.deep_interior()
+                out_f = padded[older].at[reg_idx(ew, deep)].set(
+                    pre_out[reg_idx(gh[older], deep)])
+                for band_fn, breg in band_fns:
+                    bres = band_fn(padded, scalars)[older]
+                    out_f = out_f.at[reg_idx(ew, breg)].set(
+                        bres[reg_idx(ew, breg)])
+            else:
+                out_f = step_fn(padded, scalars)[older]
+            new_field = zero_outside_global(out_f, ew)
+            padded = dict(padded)
+            padded[older], padded[newer] = padded[newer], new_field
+        return {older: crop_local(padded[older], ew),
+                newer: crop_local(padded[newer], ew)}
+
+    (m_groups, _), = groups[:1]
+    rem = groups[1] if len(groups) > 1 else None
+    main_fns = group_fns(depth)
+    rem_fns = group_fns(rem[1]) if rem else None
+
+    def sharded_window(local_arrays, scalars):
+        # coefficients: exchanged once, loop-invariant through the window
+        pcoeffs = {g: zero_outside_global(
+                       pad_exchanged(local_arrays[g], ext_main[g]),
+                       ext_main[g])
+                   for g in coeffs}
+        zcoeffs = ({g: pad_zero(local_arrays[g], gh[g]) for g in coeffs}
+                   if use_overlap else {})
+        carry = {older: local_arrays[older], newer: local_arrays[newer]}
+        if m_groups == 1:
+            carry = run_group(carry, pcoeffs, zcoeffs, scalars, main_fns)
+        else:
+            carry = lax.fori_loop(
+                0, m_groups,
+                lambda _i, c: run_group(c, pcoeffs, zcoeffs, scalars,
+                                        main_fns),
+                carry)
+        if rem is not None:
+            carry = run_group(carry, pcoeffs, zcoeffs, scalars, rem_fns)
+        return carry
+
+    gspec = P(None, *grid_axes) if batch else P(*grid_axes)
+    shmapped = shard_map(
+        sharded_window, mesh=mesh,
+        in_specs=({g: gspec for g in all_grids}, P()),
+        out_specs={older: gspec, newer: gspec},
+        check_rep=False)
+    jitted = jax.jit(shmapped)
+
+    def _interior_idx(arr):
+        o = (np.asarray(arr.shape[off:]) - np.asarray(interior_shape)) // 2
+        return ((slice(None),) * off
+                + tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
+                        for ax in range(ndim)))
+
+    def fn(arrays: Dict[str, jnp.ndarray],
+           scalars: Dict[str, jnp.ndarray]):
+        """arrays are *full* (grid-halo'd) host arrays, optionally with a
+        leading batch axis; the grid halo is assumed zero."""
+        interiors = {g: arrays[g][_interior_idx(arrays[g])]
+                     for g in all_grids}
+        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
+        out = jitted(interiors, scal)
+        result = dict(arrays)
+        for g in (older, newer):
+            full = jnp.asarray(arrays[g])
+            result[g] = full.at[_interior_idx(full)].set(out[g])
+        return result
+
+    fn.jitted = jitted
+    fn.shmapped = shmapped
+    fn.mesh = mesh
+    fn.partition_spec = gspec
+    fn.local_shape = local_shape
+    fn.spec = spec
+    fn.depth = depth
+    fn.window = window
+    fn.groups = groups
     return fn

@@ -242,7 +242,16 @@ class distributed(Backend):
     at pod level): ONE k·h-wide halo exchange covers k kernel applications,
     trading a thin shell of redundant compute for 1/k the exchange rounds.
     Requires ``swap`` — the (older, newer) grid pair rotated between
-    applications (the leapfrog buffer swap), and disables ``overlap``.
+    applications (the leapfrog buffer swap).
+
+    Under the fused engine (``st.timeloop``) the whole fusion window runs
+    as ONE shard_map'd program and ``time_steps`` (× a pallas ``inner``'s
+    ``time_block``) sets only the exchange *depth* within it: a window of
+    ``fuse_steps`` decomposes into ⌊w/k⌋ depth-k exchange groups plus a
+    remainder group inside the same ``lax.fori_loop``.  The depth must
+    satisfy k·h ≤ local shard extent; the window itself is unbounded.
+    ``overlap`` there selects the deep-interior pre-pass that hides the
+    ppermute latency behind compute (exchange geometry: core/halo.py).
     """
     kind: str = "distributed"
     grid_axes: Tuple[Optional[str], ...] = ("data",)
@@ -461,7 +470,10 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
             time_block_space=at_cfg.get("time_block_space", (1, 2, 4)),
             cache_dir=at_cfg.get("cache_dir"),
             top_k=at_cfg.get("top_k", 3),
-            cost_model=at_cfg.get("cost_model"))
+            cost_model=at_cfg.get("cost_model"),
+            # distributed candidates in a custom space are priced and
+            # measured on the launch mesh
+            mesh=mesh)
         backend = tuned.backend
         tuned_fuse = tuned.fuse_steps
     tb = _CTX.time_block if _CTX.active else None
@@ -502,10 +514,10 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
             profile_cb=_CTX.add if _CTX.active else None, batch=batch)
         _CTX.add("codegen", time.perf_counter() - t0)
         k._cache[key] = engine
-    # clamp the window to the loop length and the distributed overlapped-
-    # tiling bound (k·h ≤ local extent); report the size that actually
-    # runs.  In-kernel temporal blocking never alters the window — the
-    # between-hook cadence is honored exactly via in-window decomposition
+    # clamp the window to the loop length; report the size that actually
+    # runs.  Temporal depth (time_block / time_steps) never alters the
+    # window — the between-hook cadence is honored exactly via in-window
+    # decomposition on every backend
     fuse = engine.window_for(call.steps, fuse)
 
     def between_arrays(t, arrays):

@@ -28,12 +28,19 @@ that fusion for all three backends:
                  ping-pong with the read buffers between invocations.
                  Modeled HBM traffic per window is accumulated in
                  ``codegen.TRAFFIC_COUNT`` alongside ``PAD_COUNT``.
-  distributed  — a fusion window maps onto the overlapped-tiling /
-                 time-skewed program (one k·h-wide halo exchange covers k
-                 kernel applications), unifying ``fuse_steps`` with the
-                 backend's pre-existing ``time_steps`` knob.  A pallas
-                 ``inner`` carrying ``time_block=k_inner`` composes: the
-                 exchange width grows to k_outer·k_inner·h.
+  distributed  — the ENTIRE fusion window runs as ONE jitted shard_map'd
+                 program (``distributed.lower_distributed_window``): a
+                 ``lax.fori_loop`` over depth-k exchange groups
+                 (k = ``time_steps`` × inner ``time_block``) plus an
+                 unrolled remainder group, each group = one k·h-wide halo
+                 exchange + k kernel applications on shrinking regions +
+                 the leapfrog swap, with the deep-interior pre-pass issued
+                 before the ppermutes resolve so communication overlaps
+                 compute across steps.  ``fuse_steps`` stays the host-sync
+                 / between-hook cadence; ``time_steps``/``time_block`` set
+                 only the exchange *depth* within the window.  Batched
+                 scenarios ride a leading unsharded axis inside the same
+                 program.
 
 The host syncs only at fusion-window boundaries; an optional ``between``
 hook runs there (e.g. acoustic source injection).
@@ -71,12 +78,13 @@ from . import lowering
 
 def window_parts(kw: int, k_inner: int) -> list:
     """Decompose a fusion window that is not a multiple of the temporal
-    depth into sub-programs: the largest ``k_inner`` multiple (depth
-    active) plus the remainder.  The pallas path decomposes *inside* one
-    program (⌊kw/k⌋ k-step invocations + single steps); the distributed
-    time-skewed lowering cannot, so the engine splits the window instead —
-    an indivisible window must degrade only its remainder to depth 1,
-    never the whole window."""
+    depth: the largest ``k_inner`` multiple (depth active) plus the
+    remainder — an indivisible window must degrade only its remainder to
+    depth 1, never the whole window.  Both backends now decompose
+    *inside* one program (pallas: ⌊kw/k⌋ k-step invocations + single
+    steps; distributed: fori_loop groups + an unrolled remainder group,
+    the same split expressed by ``halo.HaloSpec.group_depths``); this
+    helper states the invariant and backs the group accounting."""
     if k_inner > 1 and kw > k_inner and kw % k_inner:
         return [kw - kw % k_inner, kw % k_inner]
     return [kw]
@@ -181,11 +189,6 @@ class TimeloopEngine:
         self.batch = int(batch)
         if self.batch < 0:
             raise ValueError("batch must be >= 0 (0 = unbatched)")
-        if self.batch and backend.kind == "distributed":
-            raise ValueError(
-                "batched timeloop does not support the distributed backend "
-                "(the scenario axis and the mesh decomposition would fight "
-                "over the leading dimensions)")
         self._profile_cb = profile_cb
         self._windows: Dict[Tuple[int, bool], Callable] = {}
         self._plan = self._plan1 = None
@@ -212,22 +215,11 @@ class TimeloopEngine:
             if self.swap is None:
                 raise ValueError("distributed timeloop requires swap=(a, b)")
             self.time_block = backend_time_block(backend)
-        # overlapped tiling bound: a k-step window exchanges k·h-wide halos,
-        # which must fit in the local shard extent on every decomposed axis
+        # fuse_steps no longer needs an overlapped-tiling clamp: the fused
+        # window decomposes into exchange groups of the backend's temporal
+        # depth, and only the *depth* (time_steps × time_block) must fit
+        # k·h ≤ local extent — validated by HaloSpec at lowering time
         self.max_fuse: Optional[int] = None
-        if backend.kind == "distributed":
-            from . import analysis as _analysis
-            info = _analysis.analyze(kernel)
-            h_max = max(info.halo) if info.halo else 0
-            if h_max and mesh is not None:
-                lim = None
-                for ax, m in enumerate(backend.grid_axes):
-                    if m is None:
-                        continue
-                    local = interior_shape[ax] // mesh.shape[m]
-                    lim = local // h_max if lim is None \
-                        else min(lim, local // h_max)
-                self.max_fuse = max(1, lim) if lim is not None else None
 
     # -- helpers -----------------------------------------------------------
     def _add(self, phase: str, dt: float) -> None:
@@ -304,32 +296,11 @@ class TimeloopEngine:
                 # program still advances all B scenarios per invocation
                 win = jax.vmap(win, in_axes=(0, 0))
             fn = jax.jit(win, donate_argnums=donate)
-        else:  # distributed
+        else:  # distributed: the whole window is ONE shard_map'd program
             from . import distributed as _dist
-            be = self.backend
-            inner = getattr(be, "inner", None)
-            k_i = self.time_block
-            if kw > 1:
-                if k_i > 1 and kw % k_i == 0:
-                    # compose pod-level skewing with in-kernel temporal
-                    # blocking: time_steps counts k_i-deep groups, the
-                    # lowering widens the exchange to (kw/k_i)·k_i·h
-                    be = dataclasses.replace(be, time_steps=kw // k_i,
-                                             swap=self.swap, overlap=False)
-                else:
-                    if k_i > 1:
-                        be = dataclasses.replace(
-                            be, inner=dataclasses.replace(inner,
-                                                          time_block=1))
-                    be = dataclasses.replace(be, time_steps=kw,
-                                             swap=self.swap, overlap=False)
-            else:
-                if k_i > 1:
-                    be = dataclasses.replace(
-                        be, inner=dataclasses.replace(inner, time_block=1))
-                be = dataclasses.replace(be, time_steps=1, swap=None)
-            fn = _dist.lower_distributed(self.kernel, self.halos,
-                                         self.interior, None, be, self.mesh)
+            fn = _dist.lower_distributed_window(
+                self.kernel, self.interior, self.backend, self.mesh,
+                self.swap, kw, batch=self.batch)
         self._add("comp", time.perf_counter() - t0)
         self._windows[(kw, masked)] = fn
         return fn
@@ -427,17 +398,9 @@ class TimeloopEngine:
             if self.batch:
                 return jax.vmap(plan.from_padded)(padded, arrays)
             return plan.from_padded(padded, arrays)
-        # distributed: the k-step (time-skewed for kw>1) program does its
-        # own internal rotation for kw>1; rotate host-side for kw==1.
-        # A window indivisible by the inner temporal depth is split into
-        # (largest multiple, remainder) sub-programs so the depth stays
-        # active for the bulk of the window (no between hook runs at the
-        # split — it is not a fusion-window boundary)
-        for part in window_parts(kw, self.time_block):
-            arrays = self._window(part)(arrays, scal)
-            if part == 1 and self.swap:
-                arrays = _rotate(arrays, self.swap)
-        return arrays
+        # distributed: one program advances the whole window (exchange
+        # groups + remainder + every leapfrog rotation happen in-program)
+        return self._window(kw)(arrays, scal)
 
 
 def run_timeloop(kernel: _ir.StencilIR,
@@ -457,3 +420,57 @@ def run_timeloop(kernel: _ir.StencilIR,
     eng = TimeloopEngine(kernel, halos, interior_shape, backend,
                          swap=swap, mesh=mesh, batch=batch)
     return eng.run(dict(arrays), scalars, steps, fuse_steps, between)
+
+
+def run_resilient(engine: TimeloopEngine,
+                  arrays: Dict[str, jnp.ndarray],
+                  scalars: Mapping[str, jnp.ndarray],
+                  steps: int,
+                  fuse_steps: Optional[int] = None,
+                  between: Optional[Callable] = None,
+                  *,
+                  ckpt_dir: str,
+                  ckpt_every: int = 1,
+                  max_failures: int = 3,
+                  injector=None,
+                  watchdog=None) -> Dict[str, jnp.ndarray]:
+    """Fault-tolerant timeloop driver: checkpoint/restore of the leapfrog
+    carry through ``train.checkpoint`` + ``train.fault_tolerance``.
+
+    The simulation advances one fusion window per restartable step; every
+    ``ckpt_every`` windows the full arrays dict (the leapfrog carry — both
+    swap buffers plus coefficient grids) is snapshotted atomically to
+    ``ckpt_dir``.  On a failure (or a fresh process pointed at the same
+    directory) the run restores the latest snapshot and resumes from that
+    window boundary.  Replay is deterministic — each window re-executes
+    the identical compiled program on the identical carry — so a resumed
+    run is bit-exact with an uninterrupted one (pinned in
+    tests/test_resilience.py).  ``between`` fires at the same window
+    boundaries as ``engine.run`` (a window is never re-split), so source
+    injection timing survives restarts too.  Works for every backend the
+    engine supports, including the distributed fused window on a mesh.
+    """
+    from repro.train import fault_tolerance as _ft
+
+    fuse = engine.window_for(steps, fuse_steps)
+    n_windows = -(-steps // fuse) if steps > 0 else 0
+    init_arrays = {g: jnp.asarray(a) for g, a in arrays.items()}
+
+    def init_fn():
+        return dict(init_arrays)
+
+    def step_fn(state, wi):
+        t0 = wi * fuse
+        kw = min(fuse, steps - t0)
+        out = engine.run(dict(state), scalars, kw, kw)
+        t1 = t0 + kw
+        if between is not None and t1 < steps:
+            out = between(t1, out) or out
+        return out
+
+    if n_windows == 0:
+        return dict(init_arrays)
+    return _ft.run_with_restarts(
+        init_fn=init_fn, step_fn=step_fn, n_steps=n_windows,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        max_failures=max_failures, injector=injector, watchdog=watchdog)

@@ -22,3 +22,25 @@ def make_host_mesh(model: int = 1):
     """Degenerate mesh for single-device smoke runs."""
     n = len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_scaling_mesh(n_devices: int, axis: str = "data"):
+    """1-D mesh over the first ``n_devices`` devices — the weak/strong
+    scaling ladder of ``benchmarks/distributed_stencil.py`` (1/2/4/8
+    forced host devices share one process, so each rung is a sub-mesh).
+    """
+    devs = jax.devices()
+    if n_devices > len(devs):
+        raise ValueError(
+            f"mesh wants {n_devices} devices, only {len(devs)} available "
+            f"(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    from jax.sharding import Mesh
+    import numpy as np
+    return Mesh(np.array(devs[:n_devices]), (axis,))
+
+
+def mesh_axes(mesh) -> dict:
+    """Plain {axis name: size} view of a mesh — the device-free geometry
+    descriptor ``core.halo.HaloSpec`` and the autotune/cost-model keys
+    consume (also accepts a mapping, passed through)."""
+    return dict(mesh.shape) if hasattr(mesh, "shape") else dict(mesh)

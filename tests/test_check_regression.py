@@ -101,6 +101,54 @@ def test_missing_predicted_vs_measured_fails():
     assert len(failures) == 6
 
 
+def _dist_bench(speedup=1.6, bytes_w=16384, match=True, pruning=True):
+    row = lambda n: {"modeled_collective_bytes_per_window": bytes_w * n,
+                     "steps_per_s": 500.0 * n}
+    return {
+        "fused_vs_per_window": {"speedup": speedup,
+                                "fused_steps_per_s": 448.0},
+        "scaling": {mode: {str(n): row(n) for n in (1, 2, 4, 8)}
+                    for mode in ("strong", "weak")},
+        "collective_model": {c: {"match": match}
+                             for c in ("w4_d2", "w5_d2", "w6_d3")},
+        "predicted_vs_measured_mesh": {
+            "best_in_top_k": True,
+            "measured_at_most_top_k": True,
+            "distributed_pruning_active": pruning,
+        },
+    }
+
+
+def test_distributed_guard_ratio_and_absolutes():
+    failures, _ = cr.check(_dist_bench(), _dist_bench(speedup=1.5))
+    assert failures == []          # cross-machine noise passes
+    # fusion silently degrading to per-group dispatch fails
+    failures, _ = cr.check(_dist_bench(), _dist_bench(speedup=0.7))
+    assert len(failures) == 1 and "fused_vs_per_window.speedup" in failures[0]
+    # the HLO cross-check and the mesh-tuning booleans are absolute
+    failures, _ = cr.check(_dist_bench(), _dist_bench(match=False),
+                           threshold=10.0)
+    assert len(failures) == 3
+    assert all("collective_model" in f for f in failures)
+    failures, _ = cr.check(_dist_bench(), _dist_bench(pruning=False))
+    assert len(failures) == 1 and "distributed_pruning_active" in failures[0]
+
+
+def test_distributed_guard_exact_modeled_bytes():
+    """The modeled collective-bytes series is pure geometry: a one-byte
+    drift vs the baseline fails even though every ratio is fine — and
+    absolute steps/s is still never guarded."""
+    fresh = _dist_bench()
+    fresh["scaling"]["strong"]["8"]["steps_per_s"] = 1.0   # 500x slower
+    failures, _ = cr.check(_dist_bench(), fresh)
+    assert failures == []
+    fresh = _dist_bench()
+    fresh["scaling"]["weak"]["4"]["modeled_collective_bytes_per_window"] += 1
+    failures, _ = cr.check(_dist_bench(), fresh)
+    assert len(failures) == 1 and "weak.4" in failures[0]
+    assert "exactly" in failures[0]
+
+
 def test_serve_guard_checks_cold_shortlist():
     base = {"serve_stream": {"batched_vs_serial_speedup": 3.0},
             "autotune_cache": {"warm": {"measured_candidates": 0},

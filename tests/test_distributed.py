@@ -102,10 +102,11 @@ else:
 
 
 def test_timeloop_fused_distributed_matches_per_step():
-    """st.timeloop on the distributed backend (fusion window → overlapped
-    tiling / time skewing, unifying fuse_steps with time_steps) must match
-    the per-step distributed target; oversized windows clamp to k·h ≤
-    local extent instead of failing."""
+    """st.timeloop on the distributed backend (one shard_mapped program
+    per fusion window: fori_loop over depth-k exchange groups) must match
+    the per-step distributed target.  The window is a fuse cadence, not
+    an exchange depth — any size works; depth (time_steps × time_block)
+    is clamped to the window and to k·h ≤ local extent by HaloSpec."""
     _run_in_subprocess("""
 import jax, numpy as np
 from repro.core import acoustic, dsl as st
@@ -124,7 +125,7 @@ st.launch(backend=st.distributed(grid_axes=("data", "model", None),
     acoustic.acoustic_target)(p0, p1, vp2, damp, dt, 6)
 ref0, ref1 = np.asarray(p0.data), np.asarray(p1.data)
 
-for fuse in (1, 2, 3, 6):   # 6 > max feasible k=3 → clamped, not an error
+for fuse in (1, 2, 3, 6):   # 6-step window = 6 depth-1 groups, ONE program
     q = mk()
     st.launch(backend=st.distributed(grid_axes=("data", "model", None)),
               mesh=mesh, fuse_steps=fuse)(
@@ -239,4 +240,143 @@ err = max(float(np.abs(np.asarray(q[0].data) - ref0).max()),
           float(np.abs(np.asarray(q[1].data) - ref1).max()))
 assert err < 1e-6, err
 print("OK engine-compose")
+""")
+
+
+def test_fused_window_single_program_and_collective_model():
+    """The fused window lowering advances W steps in ONE jitted program
+    (fori_loop over full-depth groups + unrolled remainder), matches the
+    proven per-exchange path, and its compiled HLO moves exactly the
+    collective bytes ``HaloSpec.window_collective_bytes`` prices — the
+    model the distributed cost model and the regression guard rely on."""
+    _run_in_subprocess("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import acoustic, dsl as st
+from repro.core import distributed as dist
+from repro.launch import hlo_analysis
+
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+shape = (48, 32, 24)
+k_ir = acoustic.acoustic_iso_kernel.ir
+
+for window, t_steps in ((5, 2), (6, 3), (4, 1)):
+    p0, p1, vp2, damp, dt = acoustic.make_fields(shape, pml_width=4)
+    acoustic.inject_source(p1, 0)
+    arrays = {"p0": p0.data, "p1": p1.data, "vp2": vp2.data,
+              "damp": damp.data}
+    scal = {"dt": jnp.float32(dt)}
+    interiors = {g: a[tuple(slice(4, 4 + s) for s in shape)]
+                 for g, a in arrays.items()}
+
+    be = st.distributed(grid_axes=("data", "model", None),
+                        time_steps=t_steps, swap=("p0", "p1"))
+    fn = dist.lower_distributed_window(k_ir, shape, be, mesh,
+                                       ("p0", "p1"), window)
+    assert fn.depth == t_steps and fn.window == window
+    got = fn(dict(arrays), scal)
+
+    # reference: the per-exchange time-skewed path, group by group
+    halos = {g: acoustic.acoustic_iso_kernel.info.halo
+             for g in k_ir.grid_params}
+    ref = dict(arrays)
+    for count, d in fn.groups:
+        bd = st.distributed(grid_axes=("data", "model", None),
+                            time_steps=d, swap=("p0", "p1")) if d > 1 \
+            else st.distributed(grid_axes=("data", "model", None),
+                                overlap=False)
+        g_fn = dist.lower_distributed(k_ir, halos, shape, None, bd, mesh)
+        for _ in range(count):
+            out = g_fn(ref, scal)
+            # the time-skewed path (d > 1) returns post-swap state; the
+            # per-step path writes swap[0] and leaves the swap to us
+            ref = dict(out, p0=ref["p1"], p1=out["p0"]) if d == 1 else out
+    for g in ("p0", "p1"):
+        err = float(jnp.abs(got[g] - ref[g]).max())
+        assert err < 1e-6, (window, t_steps, g, err)
+
+    # ONE program; its HLO collective traffic == the HaloSpec price
+    hlo = fn.jitted.lower(interiors, scal).compile().as_text()
+    stats = hlo_analysis.op_stats(hlo, n_devices=8)
+    want = fn.spec.window_collective_bytes(window, 4)
+    assert stats.collective_bytes == want, (
+        window, t_steps, stats.collective_bytes, want)
+    print("OK fused-window", window, "depth", t_steps,
+          int(stats.collective_bytes), "coll bytes")
+""")
+
+
+def test_distributed_batched_multi_device():
+    """Satellite: batched scenarios ride the fused sharded timeloop — a
+    leading unsharded batch axis over a real multi-device mesh must equal
+    per-scenario distributed runs."""
+    _run_in_subprocess("""
+import jax, numpy as np, jax.numpy as jnp
+from repro.core import dsl as st, suite
+
+B, STEPS, FUSE = 3, 6, 3
+mesh = jax.make_mesh((4,), ("data",))
+k = suite.get_kernel("star2d2r")
+shape = (32, 24)
+rng = np.random.default_rng(0)
+inits = {g: rng.standard_normal((B,) + shape).astype(np.float32)
+         for g in k.ir.grid_params}
+be = st.distributed(grid_axes=("data", None), time_steps=2)
+
+ser = []
+for b in range(B):
+    gs = {g: st.grid(st.f32, shape, k.info.order) for g in k.ir.grid_params}
+    for g in gs:
+        gs[g].interior = inits[g][b]
+    st.launch(backend=be, mesh=mesh, fuse_steps=FUSE)(
+        lambda *a: st.timeloop(STEPS, swap=suite.swap_pair(k.name))(k)(*a))(
+        *gs.values())
+    ser.append({g: np.asarray(gs[g].interior) for g in gs})
+
+gb = {g: st.grid(st.f32, shape, k.info.order, batch=B)
+      for g in k.ir.grid_params}
+for g in gb:
+    gb[g].interior = inits[g]
+st.launch(backend=be, mesh=mesh, fuse_steps=FUSE)(
+    lambda *a: st.timeloop(STEPS, swap=suite.swap_pair(k.name), batch=B)(k)(
+        *a))(*gb.values())
+
+for g in gb:
+    for b in range(B):
+        err = float(np.abs(np.asarray(gb[g].interior)[b] - ser[b][g]).max())
+        assert err < 1e-5, (g, b, err)
+print("OK batched-distributed 4dev")
+""")
+
+
+def test_resilient_distributed_multi_device(tmp_path):
+    """Satellite: checkpoint/restore of the leapfrog carry under the
+    fused sharded timeloop is bit-exact across an injected failure on a
+    real multi-device mesh."""
+    _run_in_subprocess(f"""
+import jax, numpy as np
+from repro.core import dsl as st, suite
+from repro.core.timeloop import TimeloopEngine, run_resilient
+from repro.train.fault_tolerance import FailureInjector
+
+mesh = jax.make_mesh((4,), ("data",))
+k = suite.get_kernel("star2d1r")
+shape = (24, 16)
+halos = {{g: (k.info.order,) * k.info.ndim for g in k.ir.grid_params}}
+be = st.distributed(grid_axes=("data", None), time_steps=2)
+
+def engine():
+    return TimeloopEngine(k.ir, halos, shape, be,
+                          swap=suite.swap_pair(k.name), mesh=mesh)
+
+gs = {{g: st.grid(np.float32, shape, k.info.order).randomize(i)
+      for i, g in enumerate(k.ir.grid_params)}}
+inits = {{g: np.asarray(v.data) for g, v in gs.items()}}
+
+ref = engine().run(dict(inits), {{}}, 7, 4)
+got = run_resilient(engine(), dict(inits), {{}}, 7, 4,
+                    ckpt_dir={str(tmp_path / 'ck')!r}, ckpt_every=1,
+                    injector=FailureInjector([1]))
+for g in ref:
+    assert np.array_equal(np.asarray(ref[g]), np.asarray(got[g])), g
+print("OK resilient-distributed 4dev")
 """)

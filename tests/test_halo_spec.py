@@ -1,0 +1,194 @@
+"""HaloSpec: the exchange geometry of the distributed runtime as a
+device-free object.  Every quantity the fused sharded timeloop depends
+on — pad widths under time_block × time_steps composition, neighbor
+slabs vs global-boundary zero fill, shrinking compute regions, the
+overlap pre-pass decomposition, indivisible-window group splits, and
+per-window collective-byte pricing — is asserted here directly on the
+spec, no mesh or devices required."""
+import pytest
+
+from repro.core.halo import HaloExchange, HaloSpec
+from repro.core.timeloop import window_parts
+
+HALOS = {"u": (1, 1), "v": (1, 1), "c": (0, 0)}
+SWAP = ("v", "u")
+
+
+def _spec(depth=1, mesh=4, shape=(16, 12), axes=("data", None), swap=SWAP,
+          halos=HALOS):
+    return HaloSpec.build(halos, axes, shape, {"data": mesh},
+                          depth=depth, swap=swap)
+
+
+# ---- pad/exchange widths under temporal composition ------------------------
+@pytest.mark.parametrize("depth,swap_w,coeff_w", [
+    # swap pair k·h_max uniform; coefficients (k−1)·h_max + h_g per axis
+    (1, 1, 0),
+    (2, 2, 1),
+    (3, 3, 2),
+])
+def test_ext_widths_compose_with_depth(depth, swap_w, coeff_w):
+    spec = _spec(depth=depth)
+    assert spec.h_max == 1
+    for g in SWAP:
+        assert spec.ext_of(g) == (swap_w, swap_w)
+    assert spec.ext_of("c") == (coeff_w, coeff_w)
+    assert spec.padded_shape("v") == (4 + 2 * swap_w, 12 + 2 * swap_w)
+
+
+def test_ext_mixes_per_grid_halo_with_depth():
+    # a wider-stencil grid keeps its own halo in the deepest-shell term
+    spec = HaloSpec.build({"u": (2, 2), "v": (2, 2), "w": (1, 0)},
+                          ("data", None), (32, 8), {"data": 4},
+                          depth=2, swap=("v", "u"))
+    assert spec.h_max == 2
+    assert spec.ext_of("v") == (4, 4)          # k·h_max
+    assert spec.ext_of("w") == (3, 2)          # (k−1)·h_max + h_g per axis
+
+
+def test_with_depth_rebuilds_same_decomposition():
+    deep = _spec(depth=3)
+    shallow = deep.with_depth(1)
+    assert shallow.local_shape == deep.local_shape
+    assert shallow.ext_of("v") == (1, 1)
+    assert shallow.depth == 1
+
+
+# ---- validation ------------------------------------------------------------
+def test_indivisible_domain_raises():
+    with pytest.raises(ValueError, match="not divisible"):
+        _spec(shape=(18, 12))
+
+
+def test_depth_exceeding_local_extent_raises():
+    # local 16/4 = 4; k·h = 5·1 > 4
+    with pytest.raises(ValueError, match="exceeds local extent"):
+        _spec(depth=5)
+
+
+def test_depth_without_swap_or_halo_raises():
+    with pytest.raises(ValueError, match="requires a swap pair"):
+        _spec(depth=2, swap=None)
+    with pytest.raises(ValueError, match="nonzero stencil halo"):
+        _spec(depth=2, halos={"u": (0, 0), "v": (0, 0)})
+
+
+def test_unknown_mesh_axis_and_bad_swap_raise():
+    with pytest.raises(ValueError, match="unknown mesh axis"):
+        HaloSpec.build(HALOS, ("model", None), (16, 12), {"data": 4},
+                       swap=SWAP)
+    with pytest.raises(ValueError, match="not a grid"):
+        _spec(swap=("v", "nope"))
+
+
+# ---- neighbor slabs vs global zero fill ------------------------------------
+def test_exchanged_axes_and_zero_fill():
+    spec = _spec(depth=2)
+    assert spec.decomposed_axes() == (0,)
+    assert spec.exchanged(0) and not spec.exchanged(1)
+    # unmapped axis 1 takes zeros at full ext width — the global zero halo
+    assert spec.zero_widths("v") == (0, 2)
+    assert spec.zero_widths("c") == (0, 1)
+    # a size-1 mesh axis has no neighbor: everything becomes zero fill
+    solo = _spec(depth=2, mesh=1)
+    assert not solo.exchanged(0)
+    assert solo.zero_widths("v") == (2, 2)
+    assert solo.exchanges() == ()
+
+
+def test_exchange_slabs_xdsl_geometry():
+    spec = _spec(depth=2)
+    exs = spec.exchanges(["v"])
+    # one decomposed axis × two directions
+    assert len(exs) == 2
+    lo = next(e for e in exs if e.neighbor < 0)
+    hi = next(e for e in exs if e.neighbor > 0)
+    for e in (lo, hi):
+        assert isinstance(e, HaloExchange)
+        assert (e.axis, e.mesh_axis, e.width) == (0, "data", 2)
+        # axis 0 is first in pad order → trailing axes at raw local extent
+        assert e.size == (2, 12)
+    assert lo.offset == (-2, 0) and hi.offset == (4, 0)
+    # the slab arrives from the neighbor's matching interior strip
+    assert lo.source_area() == ((2, 4), (0, 12))
+    assert hi.source_area() == ((0, 2), (0, 12))
+
+
+def test_slab_sizes_pad_earlier_axes():
+    # both axes decomposed: axis-1 slabs move after axis 0 is padded, so
+    # their axis-0 extent includes both halos
+    spec = HaloSpec.build({"u": (1, 1), "v": (1, 1)}, ("r", "c"), (8, 8),
+                          {"r": 2, "c": 2}, depth=1, swap=SWAP)
+    by_axis = {}
+    for e in spec.exchanges(["v"]):
+        by_axis.setdefault(e.axis, []).append(e)
+    assert {a: len(v) for a, v in by_axis.items()} == {0: 2, 1: 2}
+    assert all(e.size == (1, 4) for e in by_axis[0])
+    assert all(e.size == (4 + 2, 1) for e in by_axis[1])
+
+
+# ---- per-step regions & overlap decomposition ------------------------------
+def test_step_regions_shrink_to_interior():
+    spec = _spec(depth=3)
+    assert spec.step_region(0) == ((-2, 6), (0, 12))
+    assert spec.step_region(1) == ((-1, 5), (0, 12))
+    assert spec.step_region(2) == ((0, 4), (0, 12))
+    with pytest.raises(ValueError, match="outside depth"):
+        spec.step_region(3)
+
+
+def test_overlap_bands_tile_step0_exactly():
+    spec = _spec(depth=2, mesh=2)          # local (8, 12), h_max 1
+    deep = spec.deep_interior()
+    assert deep == ((1, 7), (0, 12))
+    bands = spec.boundary_bands()
+    assert bands == (((-1, 1), (0, 12)), ((7, 9), (0, 12)))
+    # bands + deep interior cover step_region(0) with no gaps
+    r0 = spec.step_region(0)
+    rows = set(range(*deep[0]))
+    for b in bands:
+        rows |= set(range(*b[0]))
+    assert rows == set(range(*r0[0]))
+    assert spec.overlap_feasible()
+    # 2·h_max consuming the whole local extent leaves no deep interior
+    assert not _spec(mesh=8).overlap_feasible()        # local 2 ≤ 2·h_max
+    assert not _spec(mesh=1).overlap_feasible()        # nothing exchanged
+
+
+# ---- window group splits & collective pricing ------------------------------
+@pytest.mark.parametrize("window,depth,groups", [
+    (12, 4, ((3, 4),)),
+    (10, 4, ((2, 4), (1, 2))),     # indivisible → remainder group
+    (10, 3, ((3, 3), (1, 1))),
+    (2, 4, None),                  # window below depth: see body
+])
+def test_group_depths_match_window_parts(window, depth, groups):
+    spec = _spec(depth=min(depth, 4))
+    if groups is None:
+        # build at the clamped depth the lowering would use
+        spec = _spec(depth=window)
+        assert spec.group_depths(window) == ((1, window),)
+        return
+    assert spec.group_depths(window) == groups
+    # consistency with the engine's window decomposition: same step totals
+    assert sum(c * d for c, d in spec.group_depths(window)) == window
+    assert sum(window_parts(window, depth)) == window
+
+
+def test_window_collective_bytes_prices_the_schedule():
+    spec = _spec(depth=2)
+    item = 4
+    # swap round at depth 2: 2 grids × 2 directions × (2 × 12) slabs
+    swap_round = spec.exchange_bytes(item, ["u", "v"])
+    assert swap_round == 2 * 2 * (2 * 12) * item
+    # coefficient round at depth 2: ext_of("c") == (1,1) → (1 × 12) slabs
+    coeff_round = spec.exchange_bytes(item, ["c"])
+    assert coeff_round == 2 * (1 * 12) * item
+    # window of 5 → two depth-2 groups + one depth-1 remainder; coeffs once
+    d1 = spec.with_depth(1)
+    expect = (coeff_round
+              + 2 * swap_round
+              + d1.exchange_bytes(item, ["u", "v"]))
+    assert spec.window_collective_bytes(5, item) == expect
+    # batch scales every slab linearly
+    assert spec.window_collective_bytes(5, item, batch=3) == 3 * expect

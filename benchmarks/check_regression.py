@@ -26,7 +26,9 @@ add or rename rows).
 
 The guard set is selected by the benchmark kind, auto-detected from the
 fresh JSON's top-level keys: ``BENCH_timeloop.json`` guards fusion /
-temporal-blocking ratios plus the *absolute* cost-model-quality
+temporal-blocking ratios, the same-run forward-vs-gradient ratio of the
+differentiable timeloop (with its absolute √T-checkpoint and finite-
+gradient booleans), plus the *absolute* cost-model-quality
 invariants of the two-stage autotuner (the predicted ranking must place
 the measured-best candidate in the top-K, the pruned search must stay
 within 10% of the exhaustive winner, and it must measure at most K
@@ -57,6 +59,11 @@ GUARDED_TIMELOOP = (
     ("acoustic_iso_3d.speedup", 0.50),
     ("star2d1r_pallas.time_block_4.hbm_reduction_vs_time_block_1", 0.10),
     ("star3d4r_pallas.time_block_4.hbm_reduction_vs_time_block_1", 0.10),
+    # same-run forward/gradient ratio of the differentiable timeloop: the
+    # checkpointed adjoint replays each window once and VJPs it once, so
+    # this collapses if the backward pass degrades to O(T) residuals or
+    # quadratic re-replay
+    ("gradient_throughput.star2d1r.fwd_over_grad", 0.50),
 )
 GUARDED = GUARDED_TIMELOOP  # backwards-compat alias
 
@@ -82,7 +89,12 @@ ABSOLUTE_TIMELOOP = tuple(
     (f"predicted_vs_measured.{kernel}.{flag}", True)
     for kernel in ("star2d1r", "star3d4r")
     for flag in ("best_in_top_k", "two_stage_within_10pct",
-                 "measured_at_most_top_k"))
+                 "measured_at_most_top_k")) + (
+    # adjoint invariants, computed in-run: the checkpoint count stays
+    # within the ⌈√T⌉ bound and the gradient is finite
+    ("gradient_throughput.star2d1r.sqrt_checkpoint_bound", True),
+    ("gradient_throughput.star2d1r.grad_finite", True),
+)
 
 GUARDED_DISTRIBUTED = (
     # one program per window vs one dispatch per exchange group,

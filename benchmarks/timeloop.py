@@ -152,6 +152,62 @@ def _bench_acoustic(steps: int, shape, repeats: int = 2) -> Dict:
     }
 
 
+def _bench_gradient_throughput(name: str, shape, steps: int,
+                               repeats: int = 3) -> Dict:
+    """Adjoint cost of the differentiable timeloop: jitted forward vs
+    jitted loss+gradient wall clock on the same window schedule, plus the
+    schedule's checkpoint count against the ⌈√T⌉ bound.  The
+    machine-independent columns CI guards are ``fwd_over_grad`` (the
+    checkpointed backward replays each window once and runs its VJP once,
+    so grad should stay within a small constant factor of forward — it
+    collapses if the adjoint degrades to O(T) residuals or re-replays
+    segments) and the ``sqrt_checkpoint_bound`` / ``grad_finite``
+    booleans."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import adjoint, timeloop as tl
+
+    k = suite.get_kernel(name)
+    grids = suite.make_grids(name, shape=shape)
+    eng = tl.TimeloopEngine(k.ir, {n: g.halo for n, g in grids.items()},
+                            tuple(shape), st.xla(),
+                            swap=suite.swap_pair(name), differentiable=True)
+    fn = adjoint.differentiable_run(eng, steps)
+    arrays = {n: g.data for n, g in grids.items()}
+
+    fwd = jax.jit(lambda a: fn(a, {}))
+    grad = jax.jit(jax.grad(lambda a: sum(jnp.sum(o ** 2)
+                                          for o in fn(a, {}).values())))
+
+    def time_once(f):
+        jax.block_until_ready(f(arrays))     # compile + warm
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(arrays))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_fwd = time_once(fwd)
+    t_grad = time_once(grad)
+    g = grad(arrays)
+    finite = all(bool(np.isfinite(np.asarray(v)).all()) for v in g.values())
+    bound = adjoint.ceil_sqrt(steps) + 1
+    return {
+        "kernel": name, "backend": "xla", "shape": list(shape),
+        "steps": steps,
+        "fwd_seconds": t_fwd,
+        "grad_seconds": t_grad,
+        "fwd_steps_per_s": steps / t_fwd,
+        "grad_steps_per_s": steps / t_grad,
+        "fwd_over_grad": t_fwd / t_grad,
+        "checkpoints": fn.schedule["checkpoints"],
+        "windows": len(fn.schedule["windows"]),
+        "sqrt_checkpoint_bound": bool(fn.schedule["checkpoints"] <= bound),
+        "grad_finite": finite,
+    }
+
+
 def _bench_predicted_vs_measured(name: str, shape, steps: int,
                                  space, fuse_space, time_block_space,
                                  top_k: int = 3) -> Dict:
@@ -227,6 +283,13 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
         # admits the full time_block ∈ {1, 2, 4} sweep (k·h = 16 ≤ block)
         "star3d4r_pallas": _bench_pallas_sweep(
             "star3d4r", 4 if fast else 8, None, repeats=1 if fast else 2),
+        # adjoint throughput: forward vs checkpointed gradient (CI guards
+        # fwd_over_grad and the √T-checkpoint / finite-grad booleans)
+        "gradient_throughput": {
+            "star2d1r": _bench_gradient_throughput(
+                "star2d1r", (64, 64) if fast else (128, 128),
+                16 if fast else 64),
+        },
         # two-stage autotuner quality: exhaustive vs cost-model-pruned
         # search over mixed xla/pallas spaces (CI guards the booleans)
         "predicted_vs_measured": {
@@ -253,6 +316,14 @@ def run(fast: bool = False, verbose: bool = True) -> Dict[str, Dict]:
                           f"rank-of-best {row['rank_of_measured_best']}  "
                           f"vs exhaustive "
                           f"{row['two_stage_vs_exhaustive']:.3f}x",
+                          flush=True)
+            elif name == "gradient_throughput":
+                for key, row in sorted(r.items()):
+                    print(f"{name:16s} {key:13s} "
+                          f"fwd {row['fwd_steps_per_s']:8.1f} steps/s  "
+                          f"grad {row['grad_steps_per_s']:8.1f} steps/s  "
+                          f"({row['fwd_over_grad']:.2f}x, "
+                          f"{row['checkpoints']}/{row['windows']} ckpts)",
                           flush=True)
             elif "unfused_steps_per_s" in r:
                 print(f"{name:16s} {r['steps']:4d} steps  "

@@ -1,0 +1,301 @@
+"""Adjoint wave propagation: a checkpointed VJP for the fused timeloop.
+
+Inversion workloads (FWI / RTM — what seismic users of high-order stencils
+actually run, per Devito) need gradients of a ``steps``-long leapfrog
+recursion with respect to the initial grids, the coefficient grids
+(velocity model), and the per-scenario scalars.  Naive reverse-mode
+through the fused window programs stores every step's carry as a residual
+— O(T) wavefields, which is exactly the memory wall Griewank-style
+checkpointing exists for.  This module is that scheme over the engine's
+own fusion windows:
+
+  forward   — ``jax.custom_vjp`` over the window sequence of
+              ``TimeloopEngine`` (the engine's OWN compiled programs, via
+              ``engine.window_arrays``): run W windows, snapshotting the
+              leapfrog carry (the same full-arrays snapshot structure
+              ``train/checkpoint.py`` persists, kept in memory) at every
+              ``stride``-th window start.  Checkpoint count ≈ ⌈√T⌉.
+  backward  — per checkpoint segment, newest first: REPLAY the segment's
+              windows from its checkpoint with the engine's programs
+              (bit-exact with the forward run — the same replay primitive
+              ``run_resilient``'s resume proves), then walk the segment's
+              windows in reverse pulling each cotangent through one
+              window's VJP at a time.
+
+The per-window VJP differentiates the always-correct XLA reference
+lowering (``lowering.lower_jax_window`` with ``remat=True`` — the oracle
+every Pallas kernel is validated against) at the replayed carries.  On
+the xla backend that IS the forward program; on the pallas backends the
+forward/replay stays on the engine's compiled kernels (``pallas_call``
+defines no VJP — and must not be asked for one) while the cotangent
+chain runs through the numerically-matching reference window.  Masked
+(serving) windows differentiate through ``lower_jax_window_masked``,
+whose ``where``-based freeze makes the adjoint freeze masked cells and
+budget-exhausted scenarios too.  Batched engines differentiate
+per-scenario: the reference window is vmapped over the leading scenario
+axis exactly like the forward program, so ``(B,)`` scalars and
+``(B, ...)`` grids receive per-scenario cotangents.
+
+Peak backward memory: ⌈W/stride⌉ checkpoints + one segment of replayed
+carries (≤ stride) + one window of per-step carries (≤ fuse) — with the
+default schedule (fuse ≈ ⌈√T⌉, stride thinning the checkpoints back to
+≈ ⌈√T⌉ when the caller forces a smaller hook cadence) every term is
+O(√T).
+
+``between`` hooks are supported when they are PURE traceable functions
+``between(t, arrays) -> arrays`` (e.g. jnp source injection); they fire
+at the same window boundaries as ``TimeloopEngine.run`` and are
+differentiated as part of the window chain.  Donation is disabled on the
+whole path (``timeloop._donate_ok``): a donated window input is dead
+after the call and cannot be checkpointed or replayed.
+
+User entry point: ``st.differentiable_timeloop`` in ``core/dsl.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lowering
+
+__all__ = ["ceil_sqrt", "window_schedule", "checkpoint_stride",
+           "differentiable_run", "CHECKPOINT_STATS", "reset_stats"]
+
+#: trace-time accounting of the most recent forward/backward pass —
+#: ``checkpoints`` is the number of carries saved as VJP residuals (the
+#: O(√T) bound tests pin), ``replayed_windows``/``vjp_windows`` count the
+#: backward pass's recompute work
+CHECKPOINT_STATS: Dict[str, int] = {
+    "checkpoints": 0, "replayed_windows": 0, "vjp_windows": 0}
+
+
+def reset_stats() -> None:
+    for k in CHECKPOINT_STATS:
+        CHECKPOINT_STATS[k] = 0
+
+
+def ceil_sqrt(n: int) -> int:
+    """⌈√n⌉ for n ≥ 0 (exact, no float round-trip)."""
+    if n <= 0:
+        return 0
+    r = math.isqrt(n - 1)
+    return r + 1
+
+
+def window_schedule(steps: int, fuse: int) -> Tuple[Tuple[int, ...],
+                                                    Tuple[int, ...]]:
+    """(window sizes, window start steps) of a ``steps``-long run driven in
+    fusion windows of ``fuse`` — the same decomposition ``run`` executes."""
+    sizes: List[int] = []
+    starts: List[int] = []
+    t = 0
+    while t < steps:
+        kw = min(fuse, steps - t)
+        sizes.append(kw)
+        starts.append(t)
+        t += kw
+    return tuple(sizes), tuple(starts)
+
+
+def checkpoint_stride(n_windows: int, steps: int) -> int:
+    """Checkpoint thinning: snapshot the carry every ``stride``-th window
+    start so the stored-checkpoint count stays ≈ ⌈√T⌉ even when the
+    window cadence is much finer (fuse_steps=1 → T windows).  With the
+    default fuse ≈ ⌈√T⌉ this is 1 (every window start is a checkpoint)."""
+    target = max(1, ceil_sqrt(steps))
+    return max(1, -(-n_windows // target))
+
+
+def _zeros_like_tree(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def _add_trees(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def differentiable_run(engine,
+                       steps: int,
+                       fuse_steps: Optional[int] = None,
+                       between: Optional[Callable] = None,
+                       *,
+                       domain_mask=None,
+                       step_limits=None,
+                       checkpoint_stride_windows: Optional[int] = None
+                       ) -> Callable:
+    """Differentiable counterpart of ``TimeloopEngine.run``.
+
+    Returns a PURE function ``fn(arrays, scalars) -> arrays`` computing
+    the same window sequence ``engine.run(arrays, scalars, steps,
+    fuse_steps, between)`` executes, but reverse-mode differentiable with
+    the O(√T) checkpointed adjoint described in the module docstring.
+    Gradients flow to every grid in ``arrays`` (initial wavefields AND
+    coefficient grids riding in the carry) and to every float scalar.
+
+    ``fuse_steps=None`` picks the adjoint default ⌈√steps⌉ (the memory-
+    optimal single-level schedule) instead of ``run``'s whole-loop
+    default; pass it explicitly to pin a ``between``-hook cadence.
+    ``domain_mask`` / ``step_limits`` select the masked serving windows
+    (batched xla engines only), closed over as non-differentiable
+    constants.  ``checkpoint_stride_windows`` overrides the checkpoint
+    thinning (testing / memory tuning).
+
+    The engine must be built with ``differentiable=True`` so none of its
+    window programs donate their inputs (donated buffers cannot be saved
+    as VJP residuals or replayed — ``timeloop._donate_ok``).
+    """
+    if engine.backend.kind == "distributed":
+        raise NotImplementedError(
+            "differentiable timeloop: the distributed fused window is "
+            "forward-only (shard_map adjoint not implemented); run the "
+            "single-device engine under differentiation")
+    if not engine.differentiable:
+        raise ValueError(
+            "differentiable_run requires TimeloopEngine(..., "
+            "differentiable=True): an engine that may donate window "
+            "inputs cannot be checkpointed or replayed")
+    steps = int(steps)
+    if steps <= 0:
+        def identity(arrays, scalars):
+            return dict(arrays)
+        identity.schedule = {"windows": (), "starts": (), "stride": 1,
+                             "checkpoints": 0}
+        return identity
+
+    fuse = engine.window_for(
+        steps, ceil_sqrt(steps) if fuse_steps is None else fuse_steps)
+    sizes, starts = window_schedule(steps, fuse)
+    W = len(sizes)
+    stride = (int(checkpoint_stride_windows) if checkpoint_stride_windows
+              else checkpoint_stride(W, steps))
+    n_ckpts = -(-W // stride)
+
+    masked = domain_mask is not None or step_limits is not None
+    mask = limits = None
+    if masked:
+        if not engine.batch or engine.backend.kind != "xla":
+            raise ValueError(
+                "domain_mask / step_limits require a batched xla timeloop "
+                "(the serving path)")
+        if domain_mask is None:
+            mask = jnp.ones((engine.batch,) + engine.interior, bool)
+        else:
+            mask = jnp.asarray(domain_mask, bool)
+        if step_limits is None:
+            limits = jnp.full((engine.batch,), steps, jnp.int32)
+        else:
+            limits = jnp.asarray(step_limits, jnp.int32)
+
+    # -- per-window callables ----------------------------------------------
+    # primal/replay: the engine's own compiled programs (bit-exact with a
+    # plain engine.run of the same windows)
+    _primal_cache: Dict[int, Callable] = {}
+
+    def primal_window(kw: int) -> Callable:
+        fn = _primal_cache.get(kw)
+        if fn is None:
+            fn = engine.window_arrays(kw, masked=masked)
+            _primal_cache[kw] = fn
+        return fn
+
+    # adjoint: the XLA reference lowering (remat'd: one carry per step),
+    # vmapped over the scenario axis exactly like the engine's programs
+    _adjoint_cache: Dict[int, Callable] = {}
+
+    def adjoint_window(kw: int) -> Callable:
+        fn = _adjoint_cache.get(kw)
+        if fn is None:
+            if masked:
+                win = lowering.lower_jax_window_masked(
+                    engine.kernel, engine.halos, engine.interior,
+                    engine.swap, kw, remat=True)
+                fn = jax.vmap(win, in_axes=(0, 0, 0, None, 0))
+            else:
+                win = lowering.lower_jax_window(
+                    engine.kernel, engine.halos, engine.interior, None,
+                    engine.swap, kw, remat=True)
+                fn = jax.vmap(win, in_axes=(0, 0)) if engine.batch else win
+            _adjoint_cache[kw] = fn
+        return fn
+
+    def chain(i: int, window_fn_for: Callable) -> Callable:
+        """Window i as a function of (carry, scalars): the fused window
+        program plus the ``between`` hook at its trailing boundary — the
+        exact per-window step ``engine.run`` executes."""
+        kw, t0 = sizes[i], starts[i]
+        t1 = t0 + kw
+        win = window_fn_for(kw)
+
+        def fn(arrays, scalars):
+            if masked:
+                out = win(arrays, scalars, mask, jnp.int32(t0), limits)
+            else:
+                out = win(arrays, scalars)
+            if between is not None and t1 < steps:
+                out = between(t1, dict(out))
+            return dict(out)
+        return fn
+
+    # -- custom VJP --------------------------------------------------------
+    @jax.custom_vjp
+    def core(arrays, scalars):
+        carry = dict(arrays)
+        for i in range(W):
+            carry = chain(i, primal_window)(carry, scalars)
+        return carry
+
+    def core_fwd(arrays, scalars):
+        ckpts = []
+        carry = dict(arrays)
+        for i in range(W):
+            if i % stride == 0:
+                ckpts.append(carry)
+            carry = chain(i, primal_window)(carry, scalars)
+        CHECKPOINT_STATS["checkpoints"] = len(ckpts)
+        return carry, (tuple(ckpts), scalars)
+
+    def core_bwd(res, cot):
+        ckpts, scalars = res
+        g_scal = _zeros_like_tree(scalars)
+        cot = dict(cot)
+        for seg in reversed(range(n_ckpts)):
+            first = seg * stride
+            last = min(first + stride, W)
+            # replay the segment's carries from its checkpoint with the
+            # engine's own programs — bit-exact with the forward pass
+            carries = [ckpts[seg]]
+            for i in range(first, last - 1):
+                carries.append(chain(i, primal_window)(carries[-1], scalars))
+                CHECKPOINT_STATS["replayed_windows"] += 1
+            # pull the cotangent backward one window at a time through the
+            # reference adjoint, linearized at the replayed carry
+            for i in reversed(range(first, last)):
+                _, vjp_fn = jax.vjp(chain(i, adjoint_window),
+                                    carries[i - first], scalars)
+                cot, gs = vjp_fn(cot)
+                cot = dict(cot)
+                g_scal = _add_trees(g_scal, gs)
+                CHECKPOINT_STATS["vjp_windows"] += 1
+        return cot, g_scal
+
+    core.defvjp(core_fwd, core_bwd)
+
+    def fn(arrays: Dict[str, jnp.ndarray], scalars=None):
+        scalars = {} if scalars is None else scalars
+        arrays = {g: jnp.asarray(a) for g, a in arrays.items()}
+        scal = {}
+        for n, v in scalars.items():
+            a = jnp.asarray(v)
+            if not jnp.issubdtype(a.dtype, jnp.floating):
+                a = a.astype(jnp.float32)
+            if engine.batch:
+                a = jnp.broadcast_to(a, (engine.batch,))
+            scal[n] = a
+        return core(arrays, scal)
+
+    fn.schedule = {"windows": sizes, "starts": starts, "stride": stride,
+                   "checkpoints": n_ckpts, "fuse": fuse}
+    return fn

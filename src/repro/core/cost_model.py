@@ -47,9 +47,15 @@ its sub-steps through the same ``lower_jax`` regions — a Pallas ``inner``
 only changes exchange depth), and the collective term charges
 ``halo.HaloSpec.window_collective_bytes`` — the exact per-window ppermute
 traffic of ``distributed.lower_distributed_window`` — against the
-``"link"`` rate (never probed on a host-device mesh; ``DEFAULT_RATES``
-applies) plus one link overhead per exchange group.  Without a mesh the
-prediction stays ``None`` (geometry unknown → the tuner measures).
+``"link"`` rate plus one link overhead per exchange group.  The link
+rate is *measured* when the caller's mesh is a real ``jax.sharding.Mesh``
+with ≥ 2 devices: a tiny ppermute ring probe at two message sizes solves
+(bytes_per_s, overhead_s) for that device count, keyed
+``link@{ndev}/{dtype}`` and persisted in the roofline JSON beside the
+compute rates.  A plain ``{axis: size}`` mapping (shape known, devices
+unknown) or a single-device mesh falls back to the fixed
+``DEFAULT_RATES["link"]``.  Without a mesh the prediction stays ``None``
+(geometry unknown → the tuner measures).
 """
 from __future__ import annotations
 
@@ -77,7 +83,8 @@ __all__ = ["CALIBRATION_VERSION", "Rate", "DEFAULT_RATES", "CostModel",
 #: bump when the prediction formula or the probe protocol changes —
 #: persisted calibrations (and disk tune entries, which key on this via
 #: ``autotune._disk_key``) then miss and re-derive
-CALIBRATION_VERSION = 1
+#: (v2: measured ``link@{ndev}`` rates join the roofline JSON)
+CALIBRATION_VERSION = 2
 
 #: fori_loop length of the AOT-lowered window used for XLA byte
 #: accounting: ≥ 2 keeps the loop a genuine ``while`` in optimized HLO
@@ -134,17 +141,30 @@ DEFAULT_RATES: Dict[str, Rate] = {
     "pallas": Rate(bytes_per_s=2e9, overhead_s=2e-4),
     "pallas_interpret": Rate(bytes_per_s=2e6, overhead_s=2e-3),
     # inter-shard halo-exchange traffic: bandwidth per ppermute byte plus
-    # a fixed latency per exchange *group* (one exchange round).  There is
-    # no probe for this class (``_PROBE`` has no entry → ``rate_for``
-    # falls through here); the ranking-relevant property is that link
-    # bytes are slower and rounds far more expensive than local HBM, so
-    # deeper time skewing (fewer, wider exchanges) predicts cheaper.
+    # a fixed latency per exchange *group* (one exchange round).  This is
+    # the NO-MESH fallback only — ``rate_for("link", dtype, mesh=...)``
+    # measures the real rate with a ppermute ring probe whenever the mesh
+    # carries ≥ 2 actual devices.  The ranking-relevant property of the
+    # fallback is that link bytes are slower and rounds far more expensive
+    # than local HBM, so deeper time skewing (fewer, wider exchanges)
+    # predicts cheaper.
     "link": Rate(bytes_per_s=1e9, overhead_s=5e-4),
 }
 
 
 def _rate_key(key: str, dtype) -> str:
     return f"{key}/{np.dtype(dtype).name}"
+
+
+def _probeable_mesh(mesh):
+    """The mesh, iff it is a real ``jax.sharding.Mesh`` whose device set a
+    ppermute probe can actually exercise (≥ 2 devices); else ``None``.
+    Plain ``{axis: size}`` shape mappings price geometry but name no
+    devices, so the link rate stays the fixed fallback for them."""
+    devices = getattr(mesh, "devices", None)
+    if devices is None:
+        return None
+    return mesh if np.asarray(devices).size >= 2 else None
 
 
 class CostModel:
@@ -167,15 +187,28 @@ class CostModel:
             self._load_rates()
 
     # -- rates -------------------------------------------------------------
-    def rate_for(self, key: str, dtype) -> Rate:
+    def rate_for(self, key: str, dtype, mesh=None) -> Rate:
         """Calibrated (or default) rate for one execution class × dtype.
-        First use per process probes (when ``calibrate``) and persists."""
-        rk = _rate_key(key, dtype)
+        First use per process probes (when ``calibrate``) and persists.
+
+        ``mesh`` applies to the ``"link"`` class only: a real device mesh
+        (≥ 2 devices) switches to the *measured* inter-shard rate for that
+        device count — probed once with a ppermute ring and persisted as
+        ``link@{ndev}/{dtype}`` — while a shape-only mapping, a 1-device
+        mesh, or no mesh keeps the fixed ``DEFAULT_RATES["link"]``."""
+        probe_mesh = _probeable_mesh(mesh) if key == "link" else None
+        rk = (_rate_key(f"link@{np.asarray(probe_mesh.devices).size}", dtype)
+              if probe_mesh is not None else _rate_key(key, dtype))
         r = self._rates.get(rk)
         if r is None:
+            if key == "link" and probe_mesh is None:
+                # nothing to measure against — fixed fallback, not cached
+                # to disk so a later real-mesh call still probes
+                return DEFAULT_RATES["link"]
             if self.calibrate:
                 try:
-                    r = self._probe(key, dtype)
+                    r = (self._probe_link(dtype, probe_mesh)
+                         if key == "link" else self._probe(key, dtype))
                 except Exception:
                     r = DEFAULT_RATES[key]
             else:
@@ -229,6 +262,62 @@ class CostModel:
         per_step, per_window = self.step_bytes(k, halos, tuple(shape),
                                                backend, swap, dtype)
         bw = (steps * per_step + per_window) / max(t_full - overhead, 1e-9)
+        return Rate(bytes_per_s=max(bw, 1.0), overhead_s=overhead)
+
+    #: ppermute-probe protocol: per-shard message elements at the two
+    #: sizes, and rounds per timed call (amortizes dispatch the same way
+    #: the fused exchange schedule does)
+    _LINK_PROBE = {"small": 1 << 10, "big": 1 << 16, "rounds": 8}
+
+    def _probe_link(self, dtype, mesh) -> Rate:
+        """Measure the inter-shard ``"link"`` Rate on a real device mesh.
+
+        All mesh devices form a 1-D ppermute ring (the exact collective
+        ``distributed.lower_distributed_window`` issues per halo
+        exchange); one jitted shard_map runs ``rounds`` ring shifts over a
+        per-shard message.  Timing that program at two message sizes
+        gives two equations in the roofline's two unknowns::
+
+            t(bytes) = bytes / bytes_per_s + overhead_s
+
+        so ``bytes_per_s = Δbytes/Δt`` and ``overhead_s`` falls out of the
+        small-message time.  Bytes are per shard per round — the same
+        accounting ``HaloSpec.window_collective_bytes`` charges."""
+        import time
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        devs = np.asarray(mesh.devices).reshape(-1)
+        n = devs.size
+        ring = Mesh(devs, ("ring",))
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        rounds = self._LINK_PROBE["rounds"]
+
+        def ring_fn(x):
+            def body(_, y):
+                return jax.lax.ppermute(y, "ring", perm)
+            return jax.lax.fori_loop(0, rounds, body, x)
+
+        def per_round_seconds(elems: int) -> float:
+            x = jnp.zeros((n * elems,), dtype)
+            f = jax.jit(shard_map(ring_fn, mesh=ring,
+                                  in_specs=P("ring"), out_specs=P("ring")))
+            f(x).block_until_ready()          # compile + warm the path
+            best = float("inf")
+            for _ in range(3):
+                t0 = time.perf_counter()
+                f(x).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            return best / rounds
+
+        itemsize = np.dtype(dtype).itemsize
+        small, big = self._LINK_PROBE["small"], self._LINK_PROBE["big"]
+        t_small = per_round_seconds(small)
+        t_big = per_round_seconds(big)
+        d_bytes = (big - small) * itemsize
+        bw = d_bytes / max(t_big - t_small, 1e-12)
+        overhead = max(t_small - small * itemsize / bw, 1e-8)
         return Rate(bytes_per_s=max(bw, 1.0), overhead_s=overhead)
 
     # -- calibration persistence (next to the autotune disk cache) ---------
@@ -414,7 +503,9 @@ class CostModel:
         if not math.isfinite(per_step):
             return float("inf")
         crate = self.rate_for("xla", g0.dtype)
-        lrate = self.rate_for("link", g0.dtype)
+        # measured inter-shard rate when the candidate mesh names real
+        # devices; the fixed default for shape-only meshes
+        lrate = self.rate_for("link", g0.dtype, mesh=mesh)
         coll_w = spec.window_collective_bytes(window, itemsize, batch=batch)
         groups_w = sum(c for c, _d in spec.group_depths(window))
         compute = (batch * steps * per_step / crate.bytes_per_s

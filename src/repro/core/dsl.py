@@ -44,6 +44,7 @@ from . import lowering as _lowering
 
 __all__ = [
     "grid", "kernel", "target", "map", "timeloop", "launch",
+    "differentiable_timeloop",
     "f32", "f64", "bf16", "i32", "i64",
     "xla", "pallas", "tpu", "cuda", "distributed",
     "Kernel", "LaunchResult", "TimeloopResult",
@@ -539,6 +540,93 @@ def _run_timeloop(k: Kernel, args, call: _TimeloopCall) -> TimeloopResult:
         steps=call.steps, fuse_steps=fuse,
         windows=-(-call.steps // fuse) if call.steps else 0,
         seconds=seconds)
+
+
+def differentiable_timeloop(k: Kernel, *args,
+                            steps: int,
+                            swap=None,
+                            fuse_steps: Optional[int] = None,
+                            between=None,
+                            domain_mask=None,
+                            step_limits=None,
+                            checkpoint_stride: Optional[int] = None):
+    """Differentiable fused time stepping (the adjoint wave propagator).
+
+    Takes the SAME positional arguments a ``k(u, v, dt, st.timeloop(...))``
+    call would (grids then scalars) and returns a PURE function
+
+        fn(arrays: dict[str, jnp.ndarray], scalars: dict | None) -> dict
+
+    computing ``steps`` fused applications of the kernel (+ leapfrog
+    ``swap`` rotation, ``between`` hook, optional serving masks) exactly
+    like ``st.timeloop`` — but reverse-mode differentiable under
+    ``jax.grad``/``jax.vjp``, with O(√steps) checkpointed recomputation
+    instead of O(steps) stored residuals (``core/adjoint.py``).  Gradients
+    flow to every grid array (initial wavefields and coefficient grids
+    such as a velocity model) and every float scalar; batched grids
+    differentiate per-scenario.
+
+    The positional args fix shapes/dtypes and provide defaults:
+    ``fn.arrays`` / ``fn.scalars`` hold the bound initial values, and
+    ``fn()`` runs them as-is.  ``fn.schedule`` reports the window/
+    checkpoint plan.  ``between`` must be a pure traceable hook
+    ``between(t, grids) -> None`` mutating ``g.data`` with jnp ops (e.g.
+    source injection); it runs at window boundaries, so pass
+    ``fuse_steps=1`` for a per-step cadence.  Backend/mesh come from the
+    enclosing ``st.launch`` context (default xla); the distributed
+    backend is forward-only and raises.  The engine is built with
+    ``differentiable=True`` — no buffer donation (donated window inputs
+    cannot be VJP residuals), cached separately from the forward engine.
+    """
+    from . import adjoint as _adj
+    from . import timeloop as _tl
+
+    grids, scalars = _bind_args(k, args)
+    interior = next(iter(grids.values())).shape
+    batch = next(iter(grids.values())).batch or 0
+    backend = _CTX.backend if _CTX.active else xla()
+    mesh = _CTX.mesh if _CTX.active else None
+    swap = _tl.normalize_swap(k.ir, tuple(swap) if swap is not None else None)
+
+    key = ("difftimeloop", backend.cache_key(),
+           tuple(sorted((n, g.shape, g.order, str(g.dtype))
+                        for n, g in grids.items())),
+           swap, id(mesh) if mesh is not None else None, batch)
+    engine = k._cache.get(key)
+    if engine is None:
+        halos = {n: g.halo for n, g in grids.items()}
+        engine = _tl.TimeloopEngine(
+            k.ir, halos, interior, backend, swap=swap, mesh=mesh,
+            batch=batch, differentiable=True)
+        k._cache[key] = engine
+
+    between_arrays = None
+    if between is not None:
+        def between_arrays(t, arrays):
+            # same grid-object surface as st.timeloop's hook — but traced,
+            # so the hook must be pure jnp code on g.data
+            for n, g in grids.items():
+                g.data = arrays[n]
+            between(t, grids)
+            return {n: g.data for n, g in grids.items()}
+
+    run = _adj.differentiable_run(
+        engine, steps, fuse_steps, between_arrays,
+        domain_mask=domain_mask, step_limits=step_limits,
+        checkpoint_stride_windows=checkpoint_stride)
+
+    def fn(arrays=None, scal=None):
+        if arrays is None:
+            arrays = {n: g.data for n, g in grids.items()}
+        if scal is None:
+            scal = scalars
+        return run(arrays, scal)
+
+    fn.arrays = {n: g.data for n, g in grids.items()}
+    fn.scalars = dict(scalars)
+    fn.schedule = run.schedule
+    fn.engine = engine
+    return fn
 
 
 def _build_callable(k: Kernel, backend: Backend, grids: Dict[str, grid], region):

@@ -14,6 +14,7 @@ from __future__ import annotations
 from functools import partial
 from typing import Callable, Dict, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -131,7 +132,9 @@ def lower_jax_window(kernel: ir.StencilIR,
                      interior_shape: Tuple[int, ...],
                      region: Optional[Tuple[Tuple[int, int], ...]],
                      swap: Optional[Tuple[str, str]],
-                     steps: int):
+                     steps: int,
+                     *,
+                     remat: bool = False):
     """Fused time-loop window on the XLA backend: ``steps`` applications of
     the kernel plus the leapfrog buffer rotation, executed inside a single
     ``lax.fori_loop`` program (one compiled call per fusion window instead
@@ -141,8 +144,18 @@ def lower_jax_window(kernel: ir.StencilIR,
     each application (None → no rotation).  Returns
     ``fn(arrays, scalars) -> arrays`` — pure and jittable, so the caller
     can donate the input buffers.
+
+    The window is reverse-mode differentiable: the trip count is static,
+    so the ``fori_loop`` lowers to a ``scan`` whose VJP stores one carry
+    per step.  ``remat=True`` additionally wraps the per-step kernel in
+    ``jax.checkpoint`` so the backward pass recomputes tap intermediates
+    from each step's carry instead of saving them — the configuration the
+    adjoint engine (``core/adjoint.py``) uses for its per-window VJPs,
+    keeping window residuals at one leapfrog carry per step.
     """
     step_fn = lower_jax(kernel, halos, interior_shape, region)
+    if remat:
+        step_fn = jax.checkpoint(step_fn)
 
     def window(arrays: Dict[str, jnp.ndarray],
                scalars: Mapping[str, jnp.ndarray]):
@@ -161,7 +174,9 @@ def lower_jax_window_masked(kernel: ir.StencilIR,
                             halos: Mapping[str, Tuple[int, ...]],
                             interior_shape: Tuple[int, ...],
                             swap: Optional[Tuple[str, str]],
-                            steps: int):
+                            steps: int,
+                            *,
+                            remat: bool = False):
     """Masked fused window for shape-bucketed serving: the step update is
     confined to a ``mask``-selected sub-domain and to scenarios whose step
     budget has not run out.
@@ -186,8 +201,19 @@ def lower_jax_window_masked(kernel: ir.StencilIR,
     of the window's first step, and ``limit`` the scenario's step budget.
     ``start`` is shared across a vmapped batch (in_axes=None); ``mask``
     and ``limit`` are per-scenario.
+
+    The freeze semantics are expressed with ``where``/``at.set`` selects,
+    so the window's *adjoint* freezes masked cells too: reverse-mode
+    differentiation routes a frozen cell's cotangent straight through the
+    step (identity — its value never changed) while the computed-but-
+    discarded update contributes nothing, and a budget-exhausted scenario
+    back-propagates the identity as well (no rotation, no update).  The
+    mask, start, and limit operands are non-differentiable (bool / int)
+    and receive no cotangent.  ``remat`` as in ``lower_jax_window``.
     """
     step_fn = lower_jax(kernel, halos, interior_shape, None)
+    if remat:
+        step_fn = jax.checkpoint(step_fn)
     written = kernel.output_grids()
     ndim = kernel.ndim
 

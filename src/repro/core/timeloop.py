@@ -157,8 +157,28 @@ def _rotate(arrays: Dict[str, jnp.ndarray], swap) -> Dict[str, jnp.ndarray]:
     return out
 
 
-def _donate_ok() -> bool:
-    # CPU jit does not implement buffer donation (warns and copies)
+def _under_trace() -> bool:
+    """True while some jax transformation is tracing — i.e. the engine is
+    being driven from inside someone else's program (the adjoint replay,
+    a user jit around ``run``)."""
+    try:
+        return not jax.core.trace_state_clean()
+    except AttributeError:      # moved/renamed across jax versions
+        return False
+
+
+def _donate_ok(differentiable: bool = False) -> bool:
+    """Whether fused-window programs may donate their input buffers.
+
+    Donation is gated by backend (CPU jit does not implement it — warns
+    and copies) AND by differentiation: a donated window input is dead
+    after the call, so it cannot be saved as a VJP residual or replayed
+    from a checkpoint — the backward pass would read freed buffers.  Both
+    an explicit ``differentiable=True`` engine flag and trace detection
+    (the window being built while another transform is tracing, as the
+    adjoint's forward/replay passes do) disable donation."""
+    if differentiable or _under_trace():
+        return False
     return jax.default_backend() in ("tpu", "gpu")
 
 
@@ -179,13 +199,15 @@ class TimeloopEngine:
                  swap: Optional[Tuple[str, str]] = None,
                  mesh=None,
                  profile_cb: Optional[Callable[[str, float], None]] = None,
-                 batch: int = 0):
+                 batch: int = 0,
+                 differentiable: bool = False):
         self.kernel = kernel
         self.halos = {g: tuple(h) for g, h in halos.items()}
         self.interior = tuple(interior_shape)
         self.backend = backend
         self.swap = normalize_swap(kernel, swap)
         self.mesh = mesh
+        self.differentiable = bool(differentiable)
         self.batch = int(batch)
         if self.batch < 0:
             raise ValueError("batch must be >= 0 (0 = unbatched)")
@@ -235,7 +257,7 @@ class TimeloopEngine:
         if fn is not None:
             return fn
         t0 = time.perf_counter()
-        donate = (0,) if _donate_ok() else ()
+        donate = (0,) if _donate_ok(self.differentiable) else ()
         if masked:
             if self.backend.kind != "xla" or not self.batch:
                 raise ValueError(
@@ -310,6 +332,38 @@ class TimeloopEngine:
         (see ``normalize_fuse``).  Idempotent, so callers may report the
         result and pass it back to ``run``."""
         return normalize_fuse(fuse_steps, steps, self.max_fuse)
+
+    def window_arrays(self, kw: int, masked: bool = False) -> Callable:
+        """PURE arrays-level callable for one fused window of ``kw`` steps:
+        ``fn(arrays, scalars) -> arrays`` (masked:
+        ``fn(arrays, scalars, mask, start, limits) -> arrays``), with the
+        same carry convention as ``run`` — on the pallas path the padded
+        layout round-trip and the host-side leapfrog name parity are folded
+        in, so the returned function maps full (grid-halo'd) arrays to full
+        arrays on every backend.
+
+        This is the carry-capture surface of the adjoint engine
+        (``core/adjoint.py``): the forward pass of the timeloop VJP runs
+        these callables to snapshot checkpointed carries and the backward
+        pass replays them bit-exactly from those checkpoints (the same
+        replay primitive ``run_resilient`` relies on).  Unlike
+        ``_run_window``, no wall-clock profiling, host syncs, or modeled-
+        traffic counters fire here — the function must be traceable inside
+        another transform."""
+        if masked or self.backend.kind in ("xla", "distributed"):
+            return self._window(kw, masked=masked)
+        plan, swap, batch = self._plan, self.swap, self.batch
+        win = self._window(kw)
+
+        def fn(arrays, scal):
+            padded = (jax.vmap(plan.to_padded)(arrays) if batch
+                      else plan.to_padded(arrays))
+            padded = win(padded, scal)
+            if swap and kw % 2:
+                arrays = _rotate(arrays, swap)
+            return (jax.vmap(plan.from_padded)(padded, arrays) if batch
+                    else plan.from_padded(padded, arrays))
+        return fn
 
     # -- driver ------------------------------------------------------------
     def run(self, arrays: Dict[str, jnp.ndarray],

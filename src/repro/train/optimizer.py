@@ -45,8 +45,11 @@ def schedule(c: OptConfig, step) -> jnp.ndarray:
 
 
 def global_norm(tree) -> jnp.ndarray:
-    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+    leaves = [jnp.sum(jnp.square(jnp.asarray(l).astype(jnp.float32)))
               for l in jax.tree.leaves(tree)]
+    if not leaves:
+        # empty tree has norm 0 (jnp.stack([]) would raise)
+        return jnp.float32(0.0)
     return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
 
 
@@ -57,11 +60,18 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 def _is_matrix(p) -> bool:
-    return p.ndim >= 2
+    return jnp.ndim(p) >= 2
 
 
 def apply(c: OptConfig, params, grads, opt_state, step) -> Tuple[Dict, Dict, Dict]:
-    """→ (new_params, new_opt_state, metrics).  step is 0-based."""
+    """→ (new_params, new_opt_state, metrics).  step is 0-based.
+
+    Weight decay targets matmul weights inside a parameter *tree*; a bare
+    array passed as the whole params (e.g. the velocity grid in
+    ``examples/fwi.py``) is a physical field, not a network weight, and is
+    never decayed — regularize such inversions explicitly in the loss.
+    """
+    bare = jax.tree_util.treedef_is_leaf(jax.tree.structure(params))
     grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
     grads, gnorm = clip_by_global_norm(grads, c.clip_norm)
 
@@ -77,7 +87,7 @@ def apply(c: OptConfig, params, grads, opt_state, step) -> Tuple[Dict, Dict, Dic
 
     def upd(p, m, v):
         u = (m / bc1) / (jnp.sqrt(v / bc2) + c.eps)
-        if c.weight_decay and _is_matrix(p):
+        if c.weight_decay and not bare and _is_matrix(p):
             u = u + c.weight_decay * p.astype(jnp.float32)
         return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
 

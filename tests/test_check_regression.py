@@ -19,7 +19,8 @@ def _pvm(best_in_top_k=True, within=True, at_most=True):
             for kernel in ("star2d1r", "star3d4r")}
 
 
-def _bench(star_speed, ac_speed, hbm_red, pvm=None):
+def _bench(star_speed, ac_speed, hbm_red, pvm=None,
+           fwd_over_grad=0.2, sqrt_bound=True, grad_finite=True):
     return {
         "star2d1r": {"speedup": star_speed,
                      "fused_steps_per_s": 12345.0},
@@ -27,6 +28,11 @@ def _bench(star_speed, ac_speed, hbm_red, pvm=None):
         "star2d1r_pallas": {
             "time_block_4": {"hbm_reduction_vs_time_block_1": hbm_red}},
         "predicted_vs_measured": pvm if pvm is not None else _pvm(),
+        "gradient_throughput": {
+            "star2d1r": {"fwd_over_grad": fwd_over_grad,
+                         "grad_steps_per_s": 6789.0,
+                         "sqrt_checkpoint_bound": sqrt_bound,
+                         "grad_finite": grad_finite}},
     }
 
 
@@ -99,6 +105,22 @@ def test_missing_predicted_vs_measured_fails():
     del fresh["predicted_vs_measured"]
     failures, _ = cr.check(_bench(6.0, 2.4, 1.6), fresh)
     assert len(failures) == 6
+
+
+def test_gradient_throughput_guard():
+    """The adjoint guard: the same-run fwd/grad ratio tolerates noise
+    but fails on collapse, and the √T-checkpoint / finite-gradient
+    booleans are absolute."""
+    base = _bench(6.0, 2.4, 1.6)
+    failures, _ = cr.check(base, _bench(6.0, 2.4, 1.6, fwd_over_grad=0.15))
+    assert failures == []
+    failures, _ = cr.check(base, _bench(6.0, 2.4, 1.6, fwd_over_grad=0.05))
+    assert len(failures) == 1 and "fwd_over_grad" in failures[0]
+    failures, _ = cr.check(base, _bench(6.0, 2.4, 1.6, sqrt_bound=False),
+                           threshold=10.0)   # absolutes never relaxed
+    assert len(failures) == 1 and "sqrt_checkpoint_bound" in failures[0]
+    failures, _ = cr.check(base, _bench(6.0, 2.4, 1.6, grad_finite=False))
+    assert len(failures) == 1 and "grad_finite" in failures[0]
 
 
 def _dist_bench(speedup=1.6, bytes_w=16384, match=True, pruning=True):

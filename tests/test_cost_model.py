@@ -132,11 +132,74 @@ def test_deeper_skewing_predicts_fewer_group_overheads():
     assert p4 < p1
 
 
-def test_link_rate_never_probed():
-    # the link class has a default rate but no single-device probe — the
-    # calibrated-rate lookup must fall back, not KeyError
+def test_link_rate_falls_back_without_probeable_mesh():
+    # no mesh / shape-only mapping / single-device mesh: nothing a
+    # ppermute probe could exercise — fixed default, and nothing cached
+    # (a later real-mesh call must still be allowed to probe)
     model = _model()
     assert model.rate_for("link", F32) == cm.DEFAULT_RATES["link"]
+    assert model.rate_for("link", F32, mesh={"data": 4}) \
+        == cm.DEFAULT_RATES["link"]
+    import jax
+    mesh1 = jax.make_mesh((1,), ("data",))
+    assert model.rate_for("link", F32, mesh=mesh1) \
+        == cm.DEFAULT_RATES["link"]
+    assert not any(k.startswith("link") for k in model._rates)
+
+
+def test_link_rate_keyed_by_device_count():
+    # a pre-seeded measured rate for the mesh's device count is used and
+    # a calibrate=False model never probes past it
+    class FakeMesh:
+        import numpy as _np
+        devices = _np.empty((4,), object)
+
+    seeded = cm.Rate(bytes_per_s=7e9, overhead_s=1e-5)
+    model = cm.CostModel(calibrate=False,
+                         rates={"link@4/float32": seeded})
+    assert model.rate_for("link", F32, mesh=FakeMesh()) == seeded
+    # unseeded count falls back to the default (calibrate=False)
+    class FakeMesh8:
+        import numpy as _np
+        devices = _np.empty((8,), object)
+
+    assert model.rate_for("link", F32, mesh=FakeMesh8()) \
+        == cm.DEFAULT_RATES["link"]
+
+
+def test_link_probe_measures_and_persists(tmp_path):
+    """Real ppermute ring probe on 4 forced host devices (subprocess, like
+    test_distributed.py): the measured rate replaces the default, lands in
+    the version-gated roofline JSON, and reloads."""
+    import subprocess
+    import sys
+    import textwrap
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    code = textwrap.dedent(f"""
+        import os, numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import cost_model as cm
+        d = {str(tmp_path)!r}
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("x",))
+        m = cm.CostModel(cache_dir=d, calibrate=True)
+        r = m.rate_for("link", np.float32, mesh=mesh)
+        assert r != cm.DEFAULT_RATES["link"], r
+        assert r.bytes_per_s > 0 and r.overhead_s > 0
+        assert "link@4/float32" in m._rates
+        # reload from disk without probing
+        m2 = cm.CostModel(cache_dir=d, calibrate=False)
+        assert m2.rate_for("link", np.float32, mesh=mesh) == r
+        files = [f for f in os.listdir(d) if f.startswith("roofline-")]
+        assert len(files) == 1 and f"v{{cm.CALIBRATION_VERSION}}" in files[0]
+        print("probed", r.bytes_per_s)
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=300)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "probed" in r.stdout
 
 
 def test_batch_scales_predicted_traffic():

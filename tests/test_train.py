@@ -50,6 +50,51 @@ def test_clip_by_global_norm():
     assert abs(float(cn) - 1.0) < 1e-5
 
 
+def test_global_norm_empty_tree():
+    # jnp.stack([]) used to raise on an empty pytree
+    assert float(optimizer.global_norm({})) == 0.0
+    assert float(optimizer.global_norm([])) == 0.0
+    clipped, norm = optimizer.clip_by_global_norm({}, 1.0)
+    assert clipped == {} and float(norm) == 0.0
+
+
+def test_bare_array_params_skip_weight_decay():
+    # a bare 2-D array passed as the whole params tree (the fwi.py velocity
+    # grid) is a physical field, not a matmul weight: no decay
+    c = optimizer.OptConfig(lr=0.1, warmup_steps=0, total_steps=10,
+                            weight_decay=0.5)
+    params = jnp.ones((4, 4))
+    grads = jnp.zeros((4, 4))
+    state = optimizer.init(params)
+    new_p, _, _ = optimizer.apply(c, params, grads, state, jnp.int32(0))
+    np.testing.assert_allclose(np.asarray(new_p), np.asarray(params))
+    # the same matrix inside a tree IS decayed
+    new_t, _, _ = optimizer.apply(c, {"w": params}, {"w": grads},
+                                  optimizer.init({"w": params}),
+                                  jnp.int32(0))
+    assert float(jnp.abs(new_t["w"] - params).max()) > 0
+
+
+def test_bare_array_adamw_descends():
+    # end-to-end bare-array usage: minimize ||p - target||² on one grid
+    c = optimizer.OptConfig(lr=0.1, warmup_steps=0, total_steps=50,
+                            weight_decay=0.1)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(6, 6)),
+                         jnp.float32)
+    params = jnp.zeros((6, 6))
+    state = optimizer.init(params)
+
+    def loss(p):
+        return jnp.sum((p - target) ** 2)
+
+    l0 = float(loss(params))
+    for s in range(50):
+        g = jax.grad(loss)(params)
+        params, state, _ = optimizer.apply(c, params, g, state,
+                                           jnp.int32(s))
+    assert float(loss(params)) < 0.05 * l0
+
+
 def test_adamw_decreases_loss():
     state = train_loop.init_state(CFG, jax.random.PRNGKey(0))
     step = jax.jit(train_loop.make_train_step(CFG, _tc()))

@@ -38,11 +38,14 @@ speedup plus the absolute invariants of the persistent autotune cache —
 a warm cache must serve with **zero** measured candidates and a cold
 one must measure at most its top-K shortlist (threshold overrides never
 relax absolutes); ``BENCH_distributed.json`` guards the same-run
-fused-vs-per-window speedup of the sharded timeloop, the absolute
-collective-model and mesh-tuning booleans, and — a third category — the
-**exact** deterministic series: ``HaloSpec``-modeled collective bytes
-depend only on geometry, so baseline and fresh must agree to the byte
-(any drift means the exchange schedule itself changed).
+fused-vs-per-window speedup of the sharded timeloop and the same-run
+forward-vs-gradient ratio of the distributed adjoint, the absolute
+collective-model (forward and adjoint), mesh-tuning, and per-sub-mesh
+adjoint-sanity booleans, and — a third category — the **exact**
+deterministic series: ``HaloSpec``-modeled collective bytes (and the
+transposed spec's adjoint bytes) depend only on geometry, so baseline
+and fresh must agree to the byte (any drift means the exchange schedule
+itself changed).
 
     python -m benchmarks.check_regression baseline.json fresh.json
 """
@@ -100,13 +103,27 @@ GUARDED_DISTRIBUTED = (
     # one program per window vs one dispatch per exchange group,
     # measured back-to-back in the same subprocess
     ("fused_vs_per_window.speedup", 0.50),
+    # same-run forward/gradient ratio of the DISTRIBUTED adjoint on 8
+    # devices: collapses if the shard_mapped backward degrades to O(T)
+    # residuals, quadratic re-replay, or a gathered wavefield
+    ("gradient_scaling.throughput.8.fwd_over_grad", 0.50),
 )
 
-#: in-run booleans of the distributed benchmark: the HLO cross-check of
-#: the collective-traffic model and the mesh-aware two-stage tuner
+#: in-run booleans of the distributed benchmark: the HLO cross-checks of
+#: the collective-traffic model (forward AND adjoint — the backward
+#: program's collectives must equal the transposed spec's model) and the
+#: mesh-aware two-stage tuner, plus the adjoint sanity invariants per
+#: sub-mesh size
 ABSOLUTE_DISTRIBUTED = tuple(
     (f"collective_model.{combo}.match", True)
     for combo in ("w4_d2", "w5_d2", "w6_d3")
+) + tuple(
+    (f"gradient_scaling.adjoint_collective_model.{combo}.match", True)
+    for combo in ("w4_d2", "w5_d2", "w6_d3")
+) + tuple(
+    (f"gradient_scaling.throughput.{n}.{flag}", True)
+    for n in (1, 2, 4, 8)
+    for flag in ("grad_finite", "sqrt_checkpoint_bound")
 ) + (
     ("predicted_vs_measured_mesh.best_in_top_k", True),
     ("predicted_vs_measured_mesh.measured_at_most_top_k", True),
@@ -114,11 +131,15 @@ ABSOLUTE_DISTRIBUTED = tuple(
 )
 
 #: deterministic series compared EXACTLY between baseline and fresh —
-#: the modeled collective bytes are pure geometry (no timing), so any
-#: difference is a real change to the exchange schedule
+#: the modeled collective bytes (forward and adjoint) are pure geometry
+#: (no timing), so any difference is a real change to the exchange
+#: schedule
 EXACT_DISTRIBUTED = tuple(
     f"scaling.{mode}.{n}.modeled_collective_bytes_per_window"
-    for mode in ("strong", "weak") for n in (1, 2, 4, 8))
+    for mode in ("strong", "weak") for n in (1, 2, 4, 8)) + tuple(
+    f"gradient_scaling.adjoint_collective_model.{combo}"
+    f".modeled_adjoint_bytes"
+    for combo in ("w4_d2", "w5_d2", "w6_d3"))
 
 
 def _guards_for(fresh: dict):

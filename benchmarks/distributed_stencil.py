@@ -1,7 +1,7 @@
 """Distributed stencil benchmark: the fused sharded timeloop on 8
 simulated host devices (``XLA_FLAGS=--xla_force_host_platform_device_count=8``;
 the subprocess exists because the main process must keep 1 device per the
-dry-run contract).  Emits ``BENCH_distributed.json`` with four sections:
+dry-run contract).  Emits ``BENCH_distributed.json`` with five sections:
 
 * ``fused_vs_per_window`` — the tentpole ratio: W steps as ONE
   shard_mapped program (fori_loop over exchange groups) vs the same
@@ -20,6 +20,16 @@ dry-run contract).  Emits ``BENCH_distributed.json`` with four sections:
   two-stage tuner: over a mesh-inclusive space every candidate is
   predicted, at most top-K are measured, and distributed rows are
   pruned analytically instead of forcing measurement.
+* ``gradient_scaling`` — the distributed adjoint: same-run forward vs
+  checkpointed-gradient throughput of ``st.differentiable_timeloop``'s
+  engine over 1/2/4/8-device sub-meshes (CI guards the dimensionless
+  ``fwd_over_grad`` ratio plus the finite-gradient / √T-checkpoint
+  booleans), and the adjoint HLO cross-check: the compiled backward
+  program's collective bytes must equal the *transposed* exchange
+  geometry's model (``fn.spec_T.window_collective_bytes``) exactly —
+  the reverse-ppermute slabs are the forward slabs, direction
+  inverted, so the modeled series is guarded byte-exact like the
+  forward one.
 """
 from __future__ import annotations
 
@@ -218,11 +228,100 @@ predicted_vs_measured_mesh = {{
 print("mesh tune: measured", counts["measured_candidates"], "of",
       len(res.predicted), "rank-of-best", res.rank_error, flush=True)
 
+
+# -- 5. distributed adjoint: fwd vs gradient over sub-meshes ----------------
+from repro.core import adjoint, timeloop as tl
+
+GRAD_STEPS = 8 if FAST else 16
+GRAD_WINDOW = 2
+
+
+def grad_row(n):
+    mesh = make_scaling_mesh(n)
+    eng = tl.TimeloopEngine(
+        k.ir, HALOS, STRONG,
+        st.distributed(grid_axes=("data", None), time_steps=TS),
+        swap=SWAP, mesh=mesh, differentiable=True)
+    fn = adjoint.differentiable_run(eng, GRAD_STEPS, GRAD_WINDOW)
+    arrays = mk_arrays(STRONG)
+
+    fwd = jax.jit(lambda a: fn(a, {{}}))
+    grad = jax.jit(jax.grad(lambda a: sum(jnp.sum(o ** 2)
+                                          for o in fn(a, {{}}).values())))
+
+    def time_once(f):
+        jax.block_until_ready(f(arrays))       # compile + warm
+        best = float("inf")
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(arrays))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_fwd = time_once(fwd)
+    t_grad = time_once(grad)
+    g = grad(arrays)
+    finite = all(bool(np.isfinite(np.asarray(v)).all()) for v in g.values())
+    bound = adjoint.ceil_sqrt(GRAD_STEPS // GRAD_WINDOW) + 1
+    return {{
+        "devices": n, "global_shape": list(STRONG), "steps": GRAD_STEPS,
+        "window": GRAD_WINDOW, "depth": TS,
+        "fwd_seconds": t_fwd, "grad_seconds": t_grad,
+        "fwd_steps_per_s": GRAD_STEPS / t_fwd,
+        "grad_steps_per_s": GRAD_STEPS / t_grad,
+        "fwd_over_grad": t_fwd / t_grad,
+        "checkpoints": fn.schedule["checkpoints"],
+        "windows": len(fn.schedule["windows"]),
+        "sqrt_checkpoint_bound": bool(fn.schedule["checkpoints"] <= bound),
+        "grad_finite": finite,
+    }}
+
+
+def adjoint_hlo_row(window, ts):
+    # collective bytes of the compiled BACKWARD program vs the transposed
+    # spec's model; for this linear kernel XLA DCEs the primal chain the
+    # vjp re-linearizes, leaving exactly the reverse-ppermute exchanges
+    be = st.distributed(grid_axes=("data", None), time_steps=ts)
+    fn = dist.lower_distributed_window(k.ir, STRONG, be, mesh8, SWAP,
+                                       window, differentiable=True)
+    a0 = mk_arrays(STRONG)
+    interiors = {{g: a[tuple(slice(k.info.order, k.info.order + s)
+                             for s in STRONG)]
+                 for g, a in a0.items()}}
+    cot = {{g: interiors[g] for g in SWAP}}
+    hlo = fn.bwd_jitted.lower(interiors, cot, scal).compile().as_text()
+    measured = hlo_analysis.op_stats(hlo, n_devices=8).collective_bytes
+    modeled = fn.spec_T.window_collective_bytes(window, ITEM)
+    return {{"window": window, "depth": fn.depth,
+             "modeled_adjoint_bytes": modeled, "hlo_bytes": measured,
+             "match": bool(measured == modeled)}}
+
+
+gradient_scaling = {{
+    "throughput": {{}},
+    "adjoint_collective_model": {{
+        "w4_d2": adjoint_hlo_row(4, 2),
+        "w5_d2": adjoint_hlo_row(5, 2),
+        "w6_d3": adjoint_hlo_row(6, 3),
+    }},
+}}
+for n in (1, 2, 4, 8):
+    row = grad_row(n)
+    gradient_scaling["throughput"][str(n)] = row
+    print(f"gradient n={{n}}: fwd {{row['fwd_steps_per_s']:.1f}} steps/s, "
+          f"grad {{row['grad_steps_per_s']:.1f}} steps/s "
+          f"({{row['fwd_over_grad']:.2f}}x)", flush=True)
+for name, row in sorted(gradient_scaling["adjoint_collective_model"].items()):
+    print(f"adjoint collective model {{name}}: "
+          f"modeled={{row['modeled_adjoint_bytes']}} "
+          f"hlo={{row['hlo_bytes']}} match={{row['match']}}", flush=True)
+
 print("JSON_RESULT " + json.dumps({{
     "fused_vs_per_window": fused_vs_per_window,
     "scaling": scaling,
     "collective_model": collective_model,
     "predicted_vs_measured_mesh": predicted_vs_measured_mesh,
+    "gradient_scaling": gradient_scaling,
 }}))
 """
 

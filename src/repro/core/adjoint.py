@@ -28,7 +28,13 @@ every Pallas kernel is validated against) at the replayed carries.  On
 the xla backend that IS the forward program; on the pallas backends the
 forward/replay stays on the engine's compiled kernels (``pallas_call``
 defines no VJP — and must not be asked for one) while the cotangent
-chain runs through the numerically-matching reference window.  Masked
+chain runs through the numerically-matching reference window.  On the
+distributed backend each window program carries its own VJP
+(``distributed.lower_distributed_window(differentiable=True)``): the
+cotangent pull is a second shard_map program whose halo exchanges are
+the reverse ``ppermute``s of the forward ones (``HaloSpec.transpose``
+geometry) with scalar cotangents ``psum``-reduced over the mesh, so the
+whole backward pass stays sharded end-to-end.  Masked
 (serving) windows differentiate through ``lower_jax_window_masked``,
 whose ``where``-based freeze makes the adjoint freeze masked cells and
 budget-exhausted scenarios too.  Batched engines differentiate
@@ -62,7 +68,8 @@ import jax.numpy as jnp
 from . import lowering
 
 __all__ = ["ceil_sqrt", "window_schedule", "checkpoint_stride",
-           "differentiable_run", "CHECKPOINT_STATS", "reset_stats"]
+           "differentiable_run", "resilient_grad", "CHECKPOINT_STATS",
+           "reset_stats"]
 
 #: trace-time accounting of the most recent forward/backward pass —
 #: ``checkpoints`` is the number of carries saved as VJP residuals (the
@@ -73,6 +80,13 @@ CHECKPOINT_STATS: Dict[str, int] = {
 
 
 def reset_stats() -> None:
+    """Zero ``CHECKPOINT_STATS`` (call before tracing a fresh adjoint pass
+    so its checkpoint/replay counters start from zero).
+
+    >>> reset_stats()
+    >>> CHECKPOINT_STATS["checkpoints"]
+    0
+    """
     for k in CHECKPOINT_STATS:
         CHECKPOINT_STATS[k] = 0
 
@@ -117,6 +131,126 @@ def _add_trees(a, b):
     return jax.tree.map(jnp.add, a, b)
 
 
+class _AdjointPlan:
+    """Shared prelude of the checkpointed-adjoint drivers: the window
+    schedule, the checkpoint thinning, the masked-serving closures, and
+    the per-window primal/adjoint callables — everything
+    ``differentiable_run`` (in-memory checkpoints) and ``resilient_grad``
+    (on-disk checkpoints, restartable) have in common."""
+
+    def __init__(self, engine, steps, fuse_steps, between,
+                 domain_mask, step_limits, checkpoint_stride_windows):
+        if not engine.differentiable:
+            raise ValueError(
+                "the checkpointed adjoint requires TimeloopEngine(..., "
+                "differentiable=True): an engine that may donate window "
+                "inputs cannot be checkpointed or replayed")
+        self.engine = engine
+        self.between = between
+        self.steps = steps = int(steps)
+        self.fuse = engine.window_for(
+            steps, ceil_sqrt(steps) if fuse_steps is None else fuse_steps)
+        self.sizes, self.starts = window_schedule(steps, self.fuse)
+        self.W = len(self.sizes)
+        self.stride = (int(checkpoint_stride_windows)
+                       if checkpoint_stride_windows
+                       else checkpoint_stride(self.W, steps))
+        self.n_ckpts = -(-self.W // self.stride) if self.W else 0
+
+        self.masked = domain_mask is not None or step_limits is not None
+        self.mask = self.limits = None
+        if self.masked:
+            if not engine.batch \
+                    or engine.backend.kind not in ("xla", "distributed"):
+                raise ValueError(
+                    "domain_mask / step_limits require a batched xla or "
+                    "distributed timeloop (the serving path)")
+            if domain_mask is None:
+                self.mask = jnp.ones((engine.batch,) + engine.interior,
+                                     bool)
+            else:
+                self.mask = jnp.asarray(domain_mask, bool)
+            if step_limits is None:
+                self.limits = jnp.full((engine.batch,), steps, jnp.int32)
+            else:
+                self.limits = jnp.asarray(step_limits, jnp.int32)
+
+        self._primal_cache: Dict[int, Callable] = {}
+        self._adjoint_cache: Dict[int, Callable] = {}
+
+    # primal/replay: the engine's own compiled programs (bit-exact with a
+    # plain engine.run of the same windows)
+    def primal_window(self, kw: int) -> Callable:
+        fn = self._primal_cache.get(kw)
+        if fn is None:
+            fn = self.engine.window_arrays(kw, masked=self.masked)
+            self._primal_cache[kw] = fn
+        return fn
+
+    # adjoint: the XLA reference lowering (remat'd: one carry per step),
+    # vmapped over the scenario axis exactly like the engine's programs.
+    # The distributed window program carries its own VJP (the shard_map
+    # backward program of ``distributed.lower_distributed_window``), so
+    # there the adjoint window IS the primal window.
+    def adjoint_window(self, kw: int) -> Callable:
+        engine = self.engine
+        if engine.backend.kind == "distributed":
+            return self.primal_window(kw)
+        fn = self._adjoint_cache.get(kw)
+        if fn is None:
+            if self.masked:
+                win = lowering.lower_jax_window_masked(
+                    engine.kernel, engine.halos, engine.interior,
+                    engine.swap, kw, remat=True)
+                fn = jax.vmap(win, in_axes=(0, 0, 0, None, 0))
+            else:
+                win = lowering.lower_jax_window(
+                    engine.kernel, engine.halos, engine.interior, None,
+                    engine.swap, kw, remat=True)
+                fn = jax.vmap(win, in_axes=(0, 0)) if engine.batch else win
+            self._adjoint_cache[kw] = fn
+        return fn
+
+    def chain(self, i: int, window_fn_for: Callable) -> Callable:
+        """Window i as a function of (carry, scalars): the fused window
+        program plus the ``between`` hook at its trailing boundary — the
+        exact per-window step ``engine.run`` executes."""
+        kw, t0 = self.sizes[i], self.starts[i]
+        t1 = t0 + kw
+        win = window_fn_for(kw)
+        between, steps = self.between, self.steps
+        masked, mask, limits = self.masked, self.mask, self.limits
+
+        def fn(arrays, scalars):
+            if masked:
+                out = win(arrays, scalars, mask, jnp.int32(t0), limits)
+            else:
+                out = win(arrays, scalars)
+            if between is not None and t1 < steps:
+                out = between(t1, dict(out))
+            return dict(out)
+        return fn
+
+    def normalize_scalars(self, scalars):
+        scal = {}
+        for n, v in ({} if scalars is None else scalars).items():
+            a = jnp.asarray(v)
+            if not jnp.issubdtype(a.dtype, jnp.floating):
+                a = a.astype(jnp.float32)
+            if self.engine.batch:
+                a = jnp.broadcast_to(a, (self.engine.batch,))
+            scal[n] = a
+        return scal
+
+    def vjp_window(self, i: int, carry, scalars, cot):
+        """Pull ``cot`` backward through window i linearized at ``carry``;
+        returns (carry cotangent, scalar cotangent contribution)."""
+        _, vjp_fn = jax.vjp(self.chain(i, self.adjoint_window),
+                            carry, scalars)
+        d_carry, d_scal = vjp_fn(dict(cot))
+        return dict(d_carry), d_scal
+
+
 def differentiable_run(engine,
                        steps: int,
                        fuse_steps: Optional[int] = None,
@@ -146,17 +280,23 @@ def differentiable_run(engine,
     The engine must be built with ``differentiable=True`` so none of its
     window programs donate their inputs (donated buffers cannot be saved
     as VJP residuals or replayed — ``timeloop._donate_ok``).
+
+    Distributed engines are fully supported: the replay runs the same
+    shard_mapped window programs, and the cotangent pull goes through
+    each window's own backward shard_map program (reverse ``ppermute``
+    halo exchanges — ``fn.spec_T`` geometry) instead of the single-device
+    reference window.  Gradients on the swap grids live on the interiors
+    (the distributed carry convention keeps grid-halo cells fixed at
+    zero, so no cotangent lands on them).
+
+    Example (single device; add ``mesh=`` via ``st.differentiable_timeloop``
+    for the sharded version)::
+
+        eng = TimeloopEngine(k.ir, halos, shape, st.xla(), swap=("v", "u"),
+                             differentiable=True)
+        fn = differentiable_run(eng, steps=100)
+        g = jax.grad(lambda a, s: jnp.sum(fn(a, s)["v"] ** 2))(arrays, scal)
     """
-    if engine.backend.kind == "distributed":
-        raise NotImplementedError(
-            "differentiable timeloop: the distributed fused window is "
-            "forward-only (shard_map adjoint not implemented); run the "
-            "single-device engine under differentiation")
-    if not engine.differentiable:
-        raise ValueError(
-            "differentiable_run requires TimeloopEngine(..., "
-            "differentiable=True): an engine that may donate window "
-            "inputs cannot be checkpointed or replayed")
     steps = int(steps)
     if steps <= 0:
         def identity(arrays, scalars):
@@ -165,86 +305,16 @@ def differentiable_run(engine,
                              "checkpoints": 0}
         return identity
 
-    fuse = engine.window_for(
-        steps, ceil_sqrt(steps) if fuse_steps is None else fuse_steps)
-    sizes, starts = window_schedule(steps, fuse)
-    W = len(sizes)
-    stride = (int(checkpoint_stride_windows) if checkpoint_stride_windows
-              else checkpoint_stride(W, steps))
-    n_ckpts = -(-W // stride)
-
-    masked = domain_mask is not None or step_limits is not None
-    mask = limits = None
-    if masked:
-        if not engine.batch or engine.backend.kind != "xla":
-            raise ValueError(
-                "domain_mask / step_limits require a batched xla timeloop "
-                "(the serving path)")
-        if domain_mask is None:
-            mask = jnp.ones((engine.batch,) + engine.interior, bool)
-        else:
-            mask = jnp.asarray(domain_mask, bool)
-        if step_limits is None:
-            limits = jnp.full((engine.batch,), steps, jnp.int32)
-        else:
-            limits = jnp.asarray(step_limits, jnp.int32)
-
-    # -- per-window callables ----------------------------------------------
-    # primal/replay: the engine's own compiled programs (bit-exact with a
-    # plain engine.run of the same windows)
-    _primal_cache: Dict[int, Callable] = {}
-
-    def primal_window(kw: int) -> Callable:
-        fn = _primal_cache.get(kw)
-        if fn is None:
-            fn = engine.window_arrays(kw, masked=masked)
-            _primal_cache[kw] = fn
-        return fn
-
-    # adjoint: the XLA reference lowering (remat'd: one carry per step),
-    # vmapped over the scenario axis exactly like the engine's programs
-    _adjoint_cache: Dict[int, Callable] = {}
-
-    def adjoint_window(kw: int) -> Callable:
-        fn = _adjoint_cache.get(kw)
-        if fn is None:
-            if masked:
-                win = lowering.lower_jax_window_masked(
-                    engine.kernel, engine.halos, engine.interior,
-                    engine.swap, kw, remat=True)
-                fn = jax.vmap(win, in_axes=(0, 0, 0, None, 0))
-            else:
-                win = lowering.lower_jax_window(
-                    engine.kernel, engine.halos, engine.interior, None,
-                    engine.swap, kw, remat=True)
-                fn = jax.vmap(win, in_axes=(0, 0)) if engine.batch else win
-            _adjoint_cache[kw] = fn
-        return fn
-
-    def chain(i: int, window_fn_for: Callable) -> Callable:
-        """Window i as a function of (carry, scalars): the fused window
-        program plus the ``between`` hook at its trailing boundary — the
-        exact per-window step ``engine.run`` executes."""
-        kw, t0 = sizes[i], starts[i]
-        t1 = t0 + kw
-        win = window_fn_for(kw)
-
-        def fn(arrays, scalars):
-            if masked:
-                out = win(arrays, scalars, mask, jnp.int32(t0), limits)
-            else:
-                out = win(arrays, scalars)
-            if between is not None and t1 < steps:
-                out = between(t1, dict(out))
-            return dict(out)
-        return fn
+    plan = _AdjointPlan(engine, steps, fuse_steps, between,
+                        domain_mask, step_limits, checkpoint_stride_windows)
+    W, stride, n_ckpts = plan.W, plan.stride, plan.n_ckpts
 
     # -- custom VJP --------------------------------------------------------
     @jax.custom_vjp
     def core(arrays, scalars):
         carry = dict(arrays)
         for i in range(W):
-            carry = chain(i, primal_window)(carry, scalars)
+            carry = plan.chain(i, plan.primal_window)(carry, scalars)
         return carry
 
     def core_fwd(arrays, scalars):
@@ -253,7 +323,7 @@ def differentiable_run(engine,
         for i in range(W):
             if i % stride == 0:
                 ckpts.append(carry)
-            carry = chain(i, primal_window)(carry, scalars)
+            carry = plan.chain(i, plan.primal_window)(carry, scalars)
         CHECKPOINT_STATS["checkpoints"] = len(ckpts)
         return carry, (tuple(ckpts), scalars)
 
@@ -268,15 +338,14 @@ def differentiable_run(engine,
             # engine's own programs — bit-exact with the forward pass
             carries = [ckpts[seg]]
             for i in range(first, last - 1):
-                carries.append(chain(i, primal_window)(carries[-1], scalars))
+                carries.append(
+                    plan.chain(i, plan.primal_window)(carries[-1], scalars))
                 CHECKPOINT_STATS["replayed_windows"] += 1
             # pull the cotangent backward one window at a time through the
             # reference adjoint, linearized at the replayed carry
             for i in reversed(range(first, last)):
-                _, vjp_fn = jax.vjp(chain(i, adjoint_window),
-                                    carries[i - first], scalars)
-                cot, gs = vjp_fn(cot)
-                cot = dict(cot)
+                cot, gs = plan.vjp_window(i, carries[i - first], scalars,
+                                          cot)
                 g_scal = _add_trees(g_scal, gs)
                 CHECKPOINT_STATS["vjp_windows"] += 1
         return cot, g_scal
@@ -284,18 +353,103 @@ def differentiable_run(engine,
     core.defvjp(core_fwd, core_bwd)
 
     def fn(arrays: Dict[str, jnp.ndarray], scalars=None):
-        scalars = {} if scalars is None else scalars
         arrays = {g: jnp.asarray(a) for g, a in arrays.items()}
-        scal = {}
-        for n, v in scalars.items():
-            a = jnp.asarray(v)
-            if not jnp.issubdtype(a.dtype, jnp.floating):
-                a = a.astype(jnp.float32)
-            if engine.batch:
-                a = jnp.broadcast_to(a, (engine.batch,))
-            scal[n] = a
-        return core(arrays, scal)
+        return core(arrays, plan.normalize_scalars(scalars))
 
-    fn.schedule = {"windows": sizes, "starts": starts, "stride": stride,
-                   "checkpoints": n_ckpts, "fuse": fuse}
+    fn.schedule = {"windows": plan.sizes, "starts": plan.starts,
+                   "stride": stride, "checkpoints": n_ckpts,
+                   "fuse": plan.fuse}
     return fn
+
+
+def resilient_grad(engine,
+                   arrays: Dict[str, jnp.ndarray],
+                   scalars,
+                   steps: int,
+                   loss: Callable,
+                   *,
+                   fuse_steps: Optional[int] = None,
+                   between: Optional[Callable] = None,
+                   domain_mask=None,
+                   step_limits=None,
+                   checkpoint_stride_windows: Optional[int] = None,
+                   ckpt_dir: str,
+                   ckpt_every: int = 1,
+                   max_failures: int = 3,
+                   injector=None,
+                   watchdog=None) -> Dict[str, object]:
+    """Fault-tolerant checkpointed gradient: ``value_and_grad`` of
+    ``loss(final arrays)`` through the same √T-checkpointed window
+    schedule as ``differentiable_run``, driven one restartable unit at a
+    time through ``train.fault_tolerance.run_with_restarts``.
+
+    The restartable units are: one fusion window per forward step (the
+    √T checkpoints ride in the persisted state), one step seeding the
+    cotangent with ``jax.value_and_grad(loss)``, then one checkpoint
+    *segment* per backward step (replay ≤ ``stride`` windows, pull the
+    cotangent through each in reverse).  A crash anywhere — including
+    mid-backward — resumes from the latest on-disk snapshot and yields a
+    bit-exact result (deterministic replay, same compiled programs).
+    Works on every engine ``differentiable_run`` accepts, including
+    distributed engines on a mesh.
+
+    Returns ``{"value", "grad_arrays", "grad_scalars"}``.
+    """
+    from repro.train import fault_tolerance as _ft
+
+    steps = int(steps)
+    init_arrays = {g: jnp.asarray(a) for g, a in arrays.items()}
+    if steps <= 0:
+        value, cot = jax.value_and_grad(loss)(init_arrays)
+        return {"value": value, "grad_arrays": cot,
+                "grad_scalars": _zeros_like_tree(dict(scalars or {}))}
+
+    plan = _AdjointPlan(engine, steps, fuse_steps, between,
+                        domain_mask, step_limits, checkpoint_stride_windows)
+    W, stride, n_ckpts = plan.W, plan.stride, plan.n_ckpts
+    scal = plan.normalize_scalars(scalars)
+
+    # constant-treedef restartable state: every phase of the run writes
+    # the same pytree structure, so any snapshot restores into any step
+    def init_fn():
+        zero = _zeros_like_tree(init_arrays)
+        return {"carry": dict(init_arrays),
+                "ckpts": tuple(dict(zero) for _ in range(n_ckpts)),
+                "cot": dict(zero),
+                "g_scal": _zeros_like_tree(scal),
+                "value": jnp.zeros((), jnp.result_type(float))}
+
+    def step_fn(state, wi):
+        state = dict(state)
+        if wi < W:                                   # forward window wi
+            if wi % stride == 0:
+                ckpts = list(state["ckpts"])
+                ckpts[wi // stride] = dict(state["carry"])
+                state["ckpts"] = tuple(ckpts)
+            state["carry"] = plan.chain(wi, plan.primal_window)(
+                state["carry"], scal)
+        elif wi == W:                                # seed the cotangent
+            value, cot = jax.value_and_grad(loss)(state["carry"])
+            state["value"] = jnp.asarray(value, state["value"].dtype)
+            state["cot"] = dict(cot)
+        else:                                        # backward segment
+            seg = n_ckpts - 1 - (wi - W - 1)
+            first = seg * stride
+            last = min(first + stride, W)
+            carries = [dict(state["ckpts"][seg])]
+            for i in range(first, last - 1):
+                carries.append(plan.chain(i, plan.primal_window)(
+                    carries[-1], scal))
+            cot, g_scal = state["cot"], state["g_scal"]
+            for i in reversed(range(first, last)):
+                cot, gs = plan.vjp_window(i, carries[i - first], scal, cot)
+                g_scal = _add_trees(g_scal, gs)
+            state["cot"], state["g_scal"] = cot, g_scal
+        return state
+
+    final = _ft.run_with_restarts(
+        init_fn=init_fn, step_fn=step_fn, n_steps=W + 1 + n_ckpts,
+        ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+        max_failures=max_failures, injector=injector, watchdog=watchdog)
+    return {"value": final["value"], "grad_arrays": final["cot"],
+            "grad_scalars": final["g_scal"]}

@@ -99,6 +99,8 @@ def clear_cache() -> None:
 
 
 def reset_measure_count() -> None:
+    """Zero the ``MEASURE_COUNT`` telemetry counters (tests use this to
+    assert exactly how many candidates a tune() call measured/pruned)."""
     MEASURE_COUNT.clear()
 
 
@@ -178,6 +180,9 @@ def _pred_from_json(p):
 
 
 def cache_dir_from_env() -> Optional[str]:
+    """Disk-cache directory from ``$REPRO_AUTOTUNE_CACHE`` (the
+    ``CACHE_ENV`` variable), or ``None`` when unset/empty — the default
+    ``cache_dir`` for ``tune()`` callers that want environment control."""
     return os.environ.get(CACHE_ENV) or None
 
 

@@ -384,7 +384,9 @@ def lower_distributed_window(kernel: ir.StencilIR,
                              mesh: Optional[Mesh],
                              swap: Tuple[str, str],
                              window: int,
-                             batch: int = 0):
+                             batch: int = 0,
+                             differentiable: bool = False,
+                             masked: bool = False):
     """Build ``fn(arrays, scalars) -> arrays`` advancing ``window``
     leapfrog steps in ONE jitted shard_map'd program.
 
@@ -415,6 +417,33 @@ def lower_distributed_window(kernel: ir.StencilIR,
     Global grid halos are zero, re-imposed between fused steps at mesh
     edges.  Exchange geometry/traffic live on ``fn.spec`` (a
     ``core.halo.HaloSpec``) for the cost model and tests.
+
+    ``differentiable=True`` makes the returned window reverse-mode
+    differentiable: the forward program is wrapped in a ``jax.custom_vjp``
+    whose backward pass is a SECOND jitted shard_map program
+    (``fn.bwd_jitted``) that re-linearizes the per-shard window body with
+    ``jax.vjp`` *inside* the shard_map region and pulls the cotangents
+    back through it.  Because the vjp is taken on per-device code, every
+    forward ``ppermute`` transposes to the reverse ``ppermute`` — the same
+    slab moving the opposite way, accumulating into the neighbor's edge
+    cells — i.e. exactly the geometry of ``fn.spec.transpose()`` (attached
+    as ``fn.spec_T``).  The wavefront-pipelining structure is reused as
+    is: the adjoint of the deep-interior pre-pass is again a deep-interior
+    pass with no communication dependency, so the latency hiding works
+    identically for cotangents.  Scalar cotangents are ``psum``-reduced
+    across the mesh (each shard contributes its local share).  Residuals
+    are the window *inputs* only — O(1) carries per window, composing with
+    the √T checkpointing of ``core/adjoint.py``.
+
+    ``masked=True`` (requires ``batch``) builds the serving variant
+    ``fn(arrays, scalars, mask, start, limits)`` with the exact freeze
+    semantics of ``lowering.lower_jax_window_masked`` — per-scenario
+    spatial masks and step budgets — under sharding: the mask shards like
+    a batched grid, frozen cells keep their values and travel through the
+    halo exchange like any other cell, so a masked sharded run equals the
+    masked single-device run.  Masked windows exchange at depth 1 (the
+    freeze is applied between *every* step, which a depth-k group cannot
+    honor).  Composes with ``differentiable``.
     """
     if mesh is None:
         raise ValueError("distributed backend requires launch(mesh=...)")
@@ -442,6 +471,13 @@ def lower_distributed_window(kernel: ir.StencilIR,
     if h_max == 0:
         if depth > 1:
             raise ValueError("time skewing needs a nonzero stencil halo")
+        depth = 1
+    if masked:
+        if not batch:
+            raise ValueError("masked distributed windows require batch=B "
+                             "(the serving path)")
+        # the spatial/temporal freeze applies between every step, which a
+        # depth-k exchange group's shrinking regions cannot express
         depth = 1
     depth = min(depth, window)
     spec = _halo.HaloSpec.build(gh, grid_axes, interior_shape, mesh_shape,
@@ -561,39 +597,161 @@ def lower_distributed_window(kernel: ir.StencilIR,
         return {older: crop_local(padded[older], ew),
                 newer: crop_local(padded[newer], ew)}
 
-    (m_groups, _), = groups[:1]
-    rem = groups[1] if len(groups) > 1 else None
-    main_fns = group_fns(depth)
-    rem_fns = group_fns(rem[1]) if rem else None
-
-    def sharded_window(local_arrays, scalars):
-        # coefficients: exchanged once, loop-invariant through the window
-        pcoeffs = {g: zero_outside_global(
-                       pad_exchanged(local_arrays[g], ext_main[g]),
-                       ext_main[g])
-                   for g in coeffs}
-        zcoeffs = ({g: pad_zero(local_arrays[g], gh[g]) for g in coeffs}
-                   if use_overlap else {})
-        carry = {older: local_arrays[older], newer: local_arrays[newer]}
-        if m_groups == 1:
-            carry = run_group(carry, pcoeffs, zcoeffs, scalars, main_fns)
-        else:
-            carry = lax.fori_loop(
-                0, m_groups,
-                lambda _i, c: run_group(c, pcoeffs, zcoeffs, scalars,
-                                        main_fns),
-                carry)
-        if rem is not None:
-            carry = run_group(carry, pcoeffs, zcoeffs, scalars, rem_fns)
-        return carry
-
     gspec = P(None, *grid_axes) if batch else P(*grid_axes)
-    shmapped = shard_map(
-        sharded_window, mesh=mesh,
-        in_specs=({g: gspec for g in all_grids}, P()),
-        out_specs={older: gspec, newer: gspec},
-        check_rep=False)
+
+    if masked:
+        # one full-region step at depth-1 pad widths; freeze applied on the
+        # local interiors between steps, exactly as the single-device
+        # masked window does it in buffer space
+        step_full = maybe_vmap(lowering.lower_jax(kernel, ext_main,
+                                                  local_shape, None))
+        act_shape = (batch,) + (1,) * ndim
+
+        def sharded_body(local_arrays, scalars, mask, start, limits):
+            pcoeffs = {g: zero_outside_global(
+                           pad_exchanged(local_arrays[g], ext_main[g]),
+                           ext_main[g])
+                       for g in coeffs}
+
+            def body(i, carry):
+                padded = dict(pcoeffs)
+                for g in (older, newer):
+                    padded[g] = zero_outside_global(
+                        pad_exchanged(carry[g], ext_main[g]), ext_main[g])
+                out_i = crop_local(step_full(padded, scalars)[older],
+                                   ext_main[older])
+                act = ((start + i) < limits).reshape(act_shape)
+                # spatial freeze first (masked cells keep the older
+                # buffer), then the per-scenario rotation freeze
+                frozen = jnp.where(mask, out_i, carry[older])
+                return {older: jnp.where(act, carry[newer], carry[older]),
+                        newer: jnp.where(act, frozen, carry[newer])}
+
+            carry = {older: local_arrays[older], newer: local_arrays[newer]}
+            return lax.fori_loop(0, window, body, carry)
+
+        mask_spec = P(None, *grid_axes)
+        shmapped = shard_map(
+            sharded_body, mesh=mesh,
+            in_specs=({g: gspec for g in all_grids}, P(), mask_spec,
+                      P(), P()),
+            out_specs={older: gspec, newer: gspec},
+            check_rep=False)
+    else:
+        (m_groups, _), = groups[:1]
+        rem = groups[1] if len(groups) > 1 else None
+        main_fns = group_fns(depth)
+        rem_fns = group_fns(rem[1]) if rem else None
+
+        def sharded_body(local_arrays, scalars):
+            # coefficients: exchanged once, loop-invariant through the
+            # window
+            pcoeffs = {g: zero_outside_global(
+                           pad_exchanged(local_arrays[g], ext_main[g]),
+                           ext_main[g])
+                       for g in coeffs}
+            zcoeffs = ({g: pad_zero(local_arrays[g], gh[g]) for g in coeffs}
+                       if use_overlap else {})
+            carry = {older: local_arrays[older], newer: local_arrays[newer]}
+            if m_groups == 1:
+                carry = run_group(carry, pcoeffs, zcoeffs, scalars,
+                                  main_fns)
+            else:
+                carry = lax.fori_loop(
+                    0, m_groups,
+                    lambda _i, c: run_group(c, pcoeffs, zcoeffs, scalars,
+                                            main_fns),
+                    carry)
+            if rem is not None:
+                carry = run_group(carry, pcoeffs, zcoeffs, scalars, rem_fns)
+            return carry
+
+        shmapped = shard_map(
+            sharded_body, mesh=mesh,
+            in_specs=({g: gspec for g in all_grids}, P()),
+            out_specs={older: gspec, newer: gspec},
+            check_rep=False)
+
     jitted = jax.jit(shmapped)
+
+    # -- adjoint program: jax.vjp of the per-shard body INSIDE shard_map ----
+    # (so every forward ppermute transposes to the reverse ppermute — the
+    # fn.spec_T geometry — and the deep-interior latency hiding applies to
+    # the cotangents too); scalar cotangents psum-reduce across the mesh
+    bwd_jitted = None
+    if differentiable:
+        axes = tuple(mesh.axis_names)
+
+        def _psum_scal(d_scal):
+            return {n: lax.psum(v, axes) for n, v in d_scal.items()}
+
+        if masked:
+            def sharded_adjoint(local_in, cot, scalars, mask, start,
+                                limits):
+                def f(a, s):
+                    return sharded_body(a, s, mask, start, limits)
+                _, vjp_fn = jax.vjp(f, local_in, scalars)
+                d_in, d_scal = vjp_fn(dict(cot))
+                return d_in, _psum_scal(d_scal)
+
+            bwd_shmapped = shard_map(
+                sharded_adjoint, mesh=mesh,
+                in_specs=({g: gspec for g in all_grids},
+                          {older: gspec, newer: gspec}, P(),
+                          P(None, *grid_axes), P(), P()),
+                out_specs=({g: gspec for g in all_grids}, P()),
+                check_rep=False)
+        else:
+            def sharded_adjoint(local_in, cot, scalars):
+                _, vjp_fn = jax.vjp(sharded_body, local_in, scalars)
+                d_in, d_scal = vjp_fn(dict(cot))
+                return d_in, _psum_scal(d_scal)
+
+            bwd_shmapped = shard_map(
+                sharded_adjoint, mesh=mesh,
+                in_specs=({g: gspec for g in all_grids},
+                          {older: gspec, newer: gspec}, P()),
+                out_specs=({g: gspec for g in all_grids}, P()),
+                check_rep=False)
+        bwd_jitted = jax.jit(bwd_shmapped)
+
+    if differentiable and not masked:
+        @jax.custom_vjp
+        def core(interiors, scal):
+            return jitted(interiors, scal)
+
+        def _core_fwd(interiors, scal):
+            # residuals are the window INPUTS (one carry), not per-step
+            # intermediates — the backward program re-linearizes from them
+            return jitted(interiors, scal), (interiors, scal)
+
+        def _core_bwd(res, cot):
+            interiors, scal = res
+            return bwd_jitted(interiors, dict(cot), scal)
+
+        core.defvjp(_core_fwd, _core_bwd)
+    else:
+        core = jitted
+
+    def _masked_core(mask, start, limits):
+        """custom_vjp over (interiors, scalars) with the non-differentiable
+        mask/start/limits operands closed over (they are concrete per
+        call; the compiled programs underneath are shared)."""
+        @jax.custom_vjp
+        def core_m(interiors, scal):
+            return jitted(interiors, scal, mask, start, limits)
+
+        def fwd(interiors, scal):
+            return (jitted(interiors, scal, mask, start, limits),
+                    (interiors, scal))
+
+        def bwd(res, cot):
+            interiors, scal = res
+            return bwd_jitted(interiors, dict(cot), scal, mask, start,
+                              limits)
+
+        core_m.defvjp(fwd, bwd)
+        return core_m
 
     def _interior_idx(arr):
         o = (np.asarray(arr.shape[off:]) - np.asarray(interior_shape)) // 2
@@ -601,27 +759,60 @@ def lower_distributed_window(kernel: ir.StencilIR,
                 + tuple(slice(int(o[ax]), int(o[ax]) + interior_shape[ax])
                         for ax in range(ndim)))
 
-    def fn(arrays: Dict[str, jnp.ndarray],
-           scalars: Dict[str, jnp.ndarray]):
-        """arrays are *full* (grid-halo'd) host arrays, optionally with a
-        leading batch axis; the grid halo is assumed zero."""
-        interiors = {g: arrays[g][_interior_idx(arrays[g])]
-                     for g in all_grids}
-        scal = {n: jnp.asarray(v, jnp.float32) for n, v in scalars.items()}
-        out = jitted(interiors, scal)
-        result = dict(arrays)
-        for g in (older, newer):
-            full = jnp.asarray(arrays[g])
-            result[g] = full.at[_interior_idx(full)].set(out[g])
-        return result
+    def _scal_in(v):
+        # floating dtypes pass through (the f64 adjoint path must not be
+        # silently truncated); everything else normalizes to f32 as before
+        a = jnp.asarray(v)
+        return a if jnp.issubdtype(a.dtype, jnp.floating) \
+            else a.astype(jnp.float32)
+
+    if masked:
+        def fn(arrays: Dict[str, jnp.ndarray],
+               scalars: Dict[str, jnp.ndarray],
+               mask, start, limits):
+            """arrays are *full* (grid-halo'd) host arrays with a leading
+            batch axis; the grid halo is assumed zero."""
+            interiors = {g: arrays[g][_interior_idx(arrays[g])]
+                         for g in all_grids}
+            scal = {n: _scal_in(v) for n, v in scalars.items()}
+            mask = jnp.asarray(mask, bool)
+            start = jnp.asarray(start, jnp.int32)
+            limits = jnp.asarray(limits, jnp.int32)
+            if differentiable:
+                out = _masked_core(mask, start, limits)(interiors, scal)
+            else:
+                out = jitted(interiors, scal, mask, start, limits)
+            result = dict(arrays)
+            for g in (older, newer):
+                full = jnp.asarray(arrays[g])
+                result[g] = full.at[_interior_idx(full)].set(out[g])
+            return result
+    else:
+        def fn(arrays: Dict[str, jnp.ndarray],
+               scalars: Dict[str, jnp.ndarray]):
+            """arrays are *full* (grid-halo'd) host arrays, optionally with
+            a leading batch axis; the grid halo is assumed zero."""
+            interiors = {g: arrays[g][_interior_idx(arrays[g])]
+                         for g in all_grids}
+            scal = {n: _scal_in(v) for n, v in scalars.items()}
+            out = core(interiors, scal)
+            result = dict(arrays)
+            for g in (older, newer):
+                full = jnp.asarray(arrays[g])
+                result[g] = full.at[_interior_idx(full)].set(out[g])
+            return result
 
     fn.jitted = jitted
     fn.shmapped = shmapped
+    fn.bwd_jitted = bwd_jitted
     fn.mesh = mesh
     fn.partition_spec = gspec
     fn.local_shape = local_shape
     fn.spec = spec
+    fn.spec_T = spec.transpose()
     fn.depth = depth
     fn.window = window
     fn.groups = groups
+    fn.masked = masked
+    fn.differentiable = differentiable
     return fn

@@ -102,6 +102,14 @@ class grid:
     # -- views -------------------------------------------------------------
     @property
     def halo(self) -> Tuple[int, ...]:
+        """Per-axis halo width, ``(order,) * ndim``.
+
+        Returns the number of ghost cells padded on EACH side of every
+        spatial axis.  The scenario batch axis (if any) carries no halo.
+
+        >>> grid(dtype=f32, shape=(8, 8), order=2).halo
+        (2, 2)
+        """
         return (self.order,) * len(self.shape)
 
     @property
@@ -112,6 +120,17 @@ class grid:
 
     @property
     def interior(self) -> jnp.ndarray:
+        """View of the halo-free interior, shape ``([batch,] *shape)``.
+
+        Reading slices the ``order``-deep halo ring off ``data``; assigning
+        writes a value of the same interior shape back (cast to the grid
+        dtype), leaving the halo cells untouched.
+
+        >>> g = grid(dtype=f32, shape=(4, 4), order=1)
+        >>> g.interior = 2.0 * jnp.ones((4, 4))
+        >>> (g.data.shape, float(g.interior[0, 0]), float(g.data[0, 0]))
+        ((6, 6), 2.0, 0.0)
+        """
         return self.data[self._interior_idx]
 
     @interior.setter
@@ -121,6 +140,19 @@ class grid:
 
     # -- init helpers --------------------------------------------------------
     def randomize(self, seed: int = 0, scale: float = 1.0) -> "grid":
+        """Fill the interior with ``scale`` × standard-normal noise.
+
+        Args:
+            seed: ``numpy.random.default_rng`` seed, so initial conditions
+                are reproducible across runs and backends.
+            scale: multiplier applied to the draws.
+
+        Returns this grid (chainable):
+
+        >>> g = grid(dtype=f32, shape=(8, 8), order=1).randomize(7)
+        >>> bool(jnp.any(g.interior != 0.0))
+        True
+        """
         rng = np.random.default_rng(seed)
         shape = ((self.batch,) + self.shape) if self.batch else self.shape
         vals = scale * rng.standard_normal(shape)
@@ -128,6 +160,18 @@ class grid:
         return self
 
     def copy(self) -> "grid":
+        """Shallow copy: new ``grid`` sharing this one's (immutable) buffer.
+
+        Backends never mutate ``data`` in place (jax arrays are immutable;
+        runs assign fresh buffers), so a copy taken before a launch
+        preserves the initial state for a reference run:
+
+        >>> a = grid(dtype=f32, shape=(4, 4), order=1).randomize(0)
+        >>> b = a.copy()
+        >>> a.data = a.data + 1.0   # leaves b.data untouched
+        >>> float(jnp.max(jnp.abs(a.data - b.data)))
+        1.0
+        """
         g = grid.__new__(grid)
         g.shape, g.order, g.dtype = self.shape, self.order, self.dtype
         g.batch = self.batch
@@ -144,6 +188,16 @@ class grid:
 # kernel
 # --------------------------------------------------------------------------
 class Kernel:
+    """A parsed stencil kernel: the object ``@st.kernel`` returns.
+
+    Holds the kernel's ``ir`` (:class:`repro.core.ir.StencilIR` — grid/
+    scalar params and the update expression), its static analysis in
+    ``info`` (dimensionality, stencil ``shape``/``order``, flops per
+    point, bytes moved), and a per-(backend, shapes) compilation cache.
+    Pass it to ``st.map``/``st.timeloop``/``st.differentiable_timeloop``;
+    it is not called directly.
+    """
+
     def __init__(self, fn: Callable):
         self.fn = fn
         self.name = fn.__name__
@@ -161,10 +215,35 @@ class Kernel:
 
 
 def kernel(fn: Callable) -> Kernel:
+    """Decorator parsing a Python stencil function into a :class:`Kernel`.
+
+    The body must be pure ``v.at(dx, dy, ...).set(expr)`` assignments over
+    grid parameters (annotated ``st.grid``) and scalar parameters
+    (``st.f32``/``st.i32``…), with relative offsets bounded by each grid's
+    ``order`` (paper Table 1).  Parsing happens once at decoration time
+    via the AST — the function itself never executes::
+
+        @st.kernel
+        def star2d1r(u: st.grid, v: st.grid):
+            v.at(0, 0).set(0.5 * u.at(0, 0)
+                           + 0.125 * (u.at(-1, 0) + u.at(1, 0))
+                           + 0.125 * (u.at(0, -1) + u.at(0, 1)))
+
+    Returns the :class:`Kernel` (so ``star2d1r.info.order == 1``).  Note:
+    the source must be on disk (``inspect.getsource``) — kernels cannot be
+    defined inside ``python -c`` strings or a REPL without a file.
+    """
     return Kernel(fn)
 
 
 def target(fn: Callable) -> Callable:
+    """Decorator marking a driver function for ``st.launch``.
+
+    A target is plain Python orchestrating ``st.map``/``st.timeloop``
+    calls over grids (paper Listing 1's ``run``).  The decorator only tags
+    the function — ``st.launch(backend=...)(run)(u, v, 10)`` supplies the
+    backend/mesh context its stencil calls pick up.  Returns ``fn``.
+    """
     fn._is_stencil_target = True
     return fn
 
@@ -174,14 +253,32 @@ def target(fn: Callable) -> Callable:
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class Backend:
+    """Base class for backend selectors (``st.xla``/``st.pallas``/
+    ``st.distributed``).
+
+    A backend is an immutable value object: it names a lowering path and
+    carries its knobs, and is hashed into compilation-cache keys — it
+    holds no runtime state.  Instantiate a concrete subclass and pass it
+    to ``st.launch(backend=...)`` or ``st.differentiable_timeloop(...,
+    backend=...)``.
+    """
     kind: str = "xla"
 
     def cache_key(self):
+        """Hashable tuple identifying this configuration for compilation
+        caches (every knob participates; subclasses with non-astuple-able
+        fields override)."""
         return dataclasses.astuple(self)
 
 
 @dataclasses.dataclass(frozen=True)
 class xla(Backend):
+    """Pure-``jax.numpy`` lowering compiled by XLA (the portable baseline).
+
+    No knobs: stencils become shifted-slice arithmetic on the full grid
+    buffer and XLA fuses the window.  Works on any jax platform and is
+    the reference the other backends are validated against.
+    """
     kind: str = "xla"
 
 
@@ -220,6 +317,11 @@ class pallas(Backend):
 
 
 def tpu(**kw) -> pallas:
+    """Alias for :class:`pallas` (paper naming: the TPU backend).
+
+    ``st.tpu(template="smem", block=(256, 256))`` ≡
+    ``st.pallas(template="smem", block=(256, 256))``.
+    """
     return pallas(**kw)
 
 
@@ -262,6 +364,8 @@ class distributed(Backend):
     swap: Optional[Tuple[str, str]] = None
 
     def cache_key(self):
+        """Cache key flattening the nested ``inner`` backend (plain
+        ``astuple`` would recurse into the dataclass and lose its type)."""
         return ("distributed", self.grid_axes, self.inner.cache_key(),
                 self.overlap, self.time_steps, self.swap)
 
@@ -288,6 +392,13 @@ _CTX = _Ctx()
 
 @dataclasses.dataclass
 class LaunchResult:
+    """What a launched target returns.
+
+    ``value`` is the target function's own return value; ``profile`` maps
+    phase names to accumulated seconds — ``codegen`` (trace + lower),
+    ``comp`` (XLA compile), ``kernel`` (device execution, blocked until
+    ready) and ``total`` (wall clock for the whole launch).
+    """
     value: object
     profile: Dict[str, float]
 
@@ -310,6 +421,19 @@ class _MapCall:
 
 
 def map(begin=None, end=None, e=None) -> _MapCall:  # noqa: A001 (paper name)
+    """Apply a kernel over an interior region (paper §4.2's ``map``).
+
+    ``st.map(e=u.shape)(star2d1r)(u, v)`` sweeps the whole interior;
+    ``st.map(begin=(8, 0), end=(16, 64))`` restricts the update to a
+    sub-box (half-open per-axis bounds in interior coordinates — cells
+    outside keep their old values).  The returned applicator binds
+    positional args per the kernel signature (grids first, then scalars),
+    runs one compiled application, and writes results back into the
+    output grids' ``.data``.  Inside ``st.launch`` the context backend
+    applies; standalone calls use ``st.xla()``.  For time stepping prefer
+    ``st.timeloop`` — per-step ``map`` calls sync with the host every
+    application.
+    """
     return _MapCall(begin=begin, end=end, e=e)
 
 
@@ -381,6 +505,14 @@ def _apply_kernel(k: Kernel, args, begin, end):
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class TimeloopResult:
+    """Execution report returned by a ``st.timeloop`` application.
+
+    ``steps`` is the number of kernel applications requested; ``fuse_steps``
+    the fusion-window size that actually ran (after clamping to the loop
+    length); ``windows`` the number of compiled-program invocations
+    (``ceil(steps / fuse_steps)``); ``seconds`` the wall-clock time of the
+    loop body including device sync.
+    """
     steps: int
     fuse_steps: int
     windows: int
@@ -388,6 +520,7 @@ class TimeloopResult:
 
     @property
     def steps_per_s(self) -> float:
+        """Time-step throughput, ``steps / seconds`` (inf when untimed)."""
         return self.steps / self.seconds if self.seconds > 0 else float("inf")
 
 
@@ -549,7 +682,9 @@ def differentiable_timeloop(k: Kernel, *args,
                             between=None,
                             domain_mask=None,
                             step_limits=None,
-                            checkpoint_stride: Optional[int] = None):
+                            checkpoint_stride: Optional[int] = None,
+                            backend=None,
+                            mesh=None):
     """Differentiable fused time stepping (the adjoint wave propagator).
 
     Takes the SAME positional arguments a ``k(u, v, dt, st.timeloop(...))``
@@ -573,10 +708,25 @@ def differentiable_timeloop(k: Kernel, *args,
     ``between(t, grids) -> None`` mutating ``g.data`` with jnp ops (e.g.
     source injection); it runs at window boundaries, so pass
     ``fuse_steps=1`` for a per-step cadence.  Backend/mesh come from the
-    enclosing ``st.launch`` context (default xla); the distributed
-    backend is forward-only and raises.  The engine is built with
-    ``differentiable=True`` — no buffer donation (donated window inputs
-    cannot be VJP residuals), cached separately from the forward engine.
+    ``backend=`` / ``mesh=`` keywords, falling back to the enclosing
+    ``st.launch`` context (default xla).  With
+    ``backend=st.distributed(...), mesh=...`` the forward windows run as
+    shard_mapped programs on the mesh and the backward pass pulls
+    cotangents through each window's own reverse-``ppermute`` shard_map
+    program — gradients reach sharded velocity grids and per-scenario
+    scalars without ever gathering the wavefield.  The engine is built
+    with ``differentiable=True`` — no buffer donation (donated window
+    inputs cannot be VJP residuals), cached separately from the forward
+    engine.
+
+    Example::
+
+        fn = st.differentiable_timeloop(
+            k, u, v, c, dt, steps=200, swap=("v", "u"),
+            backend=st.distributed(grid_axes=("data", None)),
+            mesh=jax.make_mesh((8,), ("data",)))
+        value, grads = jax.value_and_grad(
+            lambda a: jnp.sum(fn(a)["v"] ** 2))(fn.arrays)
     """
     from . import adjoint as _adj
     from . import timeloop as _tl
@@ -584,8 +734,10 @@ def differentiable_timeloop(k: Kernel, *args,
     grids, scalars = _bind_args(k, args)
     interior = next(iter(grids.values())).shape
     batch = next(iter(grids.values())).batch or 0
-    backend = _CTX.backend if _CTX.active else xla()
-    mesh = _CTX.mesh if _CTX.active else None
+    if backend is None:
+        backend = _CTX.backend if _CTX.active else xla()
+    if mesh is None:
+        mesh = _CTX.mesh if _CTX.active else None
     swap = _tl.normalize_swap(k.ir, tuple(swap) if swap is not None else None)
 
     key = ("difftimeloop", backend.cache_key(),

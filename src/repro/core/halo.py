@@ -28,6 +28,14 @@ that schedule — coefficients exchanged once per window at the full
 depth, the swap pair once per group at the group's own depth — and is
 cross-checked against ``hlo_analysis`` collective accounting of the
 compiled program in ``benchmarks/distributed_stencil.py``.
+
+``transpose()`` is the adjoint geometry: reverse-mode differentiation
+turns every halo *receive* into a cotangent *send-back* — the transpose
+of a ``ppermute`` is the ppermute with the inverted permutation, moving
+the same slab the opposite way, and the slab lands as an *accumulation*
+into the neighbor's edge region instead of an overwrite of a halo
+region.  Slab shapes (and therefore ``window_collective_bytes``) are
+identical to the forward spec; only direction and destination flip.
 """
 from __future__ import annotations
 
@@ -53,7 +61,13 @@ class HaloExchange:
     the lowering concatenates (axes below ``axis`` are already padded when
     this slab moves, so their extents include both halos), and
     ``source_offset`` the shift onto the neighbor's coordinates — the cells
-    arrive from ``offset + source_offset`` on the ``neighbor`` side."""
+    arrive from ``offset + source_offset`` on the ``neighbor`` side.
+
+    ``accumulate`` marks an adjoint (transposed) exchange: the arriving
+    slab is *added into* the destination region (cotangents from the
+    neighbor's halo reads sum into the owning cells) instead of
+    overwriting a halo region, exactly as the transpose of a gather is a
+    scatter-add."""
     grid: str
     axis: int                       # grid axis being exchanged
     mesh_axis: str                  # mesh axis the neighbor lives on
@@ -62,12 +76,17 @@ class HaloExchange:
     size: Tuple[int, ...]
     offset: Tuple[int, ...]
     source_offset: Tuple[int, ...]
+    accumulate: bool = False
 
     @property
     def elems(self) -> int:
+        """Number of grid points in the slab (product of ``size``)."""
         return _prod(self.size)
 
     def nbytes(self, itemsize: int, batch: int = 1) -> int:
+        """Bytes this slab moves: ``elems * itemsize``, times the scenario
+        ``batch`` when the grids carry a leading batch axis (every scenario
+        exchanges its own slab inside one collective)."""
         return self.elems * int(itemsize) * max(1, int(batch))
 
     def source_area(self) -> Tuple[Tuple[int, int], ...]:
@@ -90,6 +109,7 @@ class HaloSpec:
     h_max: int
     local_shape: Tuple[int, ...]
     ext: Tuple[Tuple[str, Tuple[int, ...]], ...]     # grid → pad widths
+    reverse: bool = False                            # adjoint direction
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -159,20 +179,42 @@ class HaloSpec:
 
     def with_depth(self, depth: int) -> "HaloSpec":
         """Same decomposition at another temporal depth (remainder groups)."""
-        return HaloSpec.build(dict(self.halos), self.grid_axes,
-                              self.interior_shape, dict(self.mesh_shape),
-                              depth=depth, swap=self.swap)
+        sub = HaloSpec.build(dict(self.halos), self.grid_axes,
+                             self.interior_shape, dict(self.mesh_shape),
+                             depth=depth, swap=self.swap)
+        return dataclasses.replace(sub, reverse=self.reverse)
+
+    def transpose(self) -> "HaloSpec":
+        """The adjoint exchange geometry: same grids, widths, slab shapes
+        and traffic, but every slab moves the *opposite* direction and
+        lands as an accumulation into the neighbor's edge region (the
+        reverse ``ppermute`` that is the transpose of the forward one).
+        An involution: ``spec.transpose().transpose() == spec``.
+
+        >>> s = HaloSpec.build({"u": (1, 1), "v": (1, 1)}, ("data", None),
+        ...                    (8, 8), {"data": 2}, depth=1, swap=("v", "u"))
+        >>> t = s.transpose()
+        >>> t.exchange_bytes(4) == s.exchange_bytes(4)
+        True
+        >>> t.transpose() == s
+        True
+        """
+        return dataclasses.replace(self, reverse=not self.reverse)
 
     # -- mappings ----------------------------------------------------------
     @property
     def grids(self) -> Tuple[str, ...]:
+        """Grid names in the spec, sorted (the ``halos`` mapping's keys)."""
         return tuple(g for g, _ in self.halos)
 
     @property
     def ndim(self) -> int:
+        """Number of spatial axes of the decomposed domain."""
         return len(self.interior_shape)
 
     def halo_of(self, grid: str) -> Tuple[int, ...]:
+        """Per-axis stencil halo of one grid (the ``order``-derived widths
+        the kernel reads, before any depth widening)."""
         return dict(self.halos)[grid]
 
     def ext_of(self, grid: str) -> Tuple[int, ...]:
@@ -180,9 +222,12 @@ class HaloSpec:
         return dict(self.ext)[grid]
 
     def mesh_size(self, name: Optional[str]) -> int:
+        """Shard count along mesh axis ``name`` (1 for ``None``/unknown —
+        an unmapped grid axis behaves like a single-shard split)."""
         return dict(self.mesh_shape).get(name, 1) if name else 1
 
     def decomposed_axes(self) -> Tuple[int, ...]:
+        """Grid-axis indices mapped to a mesh axis (in axis order)."""
         return tuple(ax for ax, m in enumerate(self.grid_axes) if m)
 
     def exchanged(self, ax: int) -> bool:
@@ -193,6 +238,9 @@ class HaloSpec:
         return bool(m) and self.mesh_size(m) > 1
 
     def padded_shape(self, grid: str) -> Tuple[int, ...]:
+        """Local shard shape of one grid after the exchange pads both sides
+        of every axis with its ``ext_of`` width (what the per-shard kernel
+        actually sees, minus any scenario batch axis)."""
         e = self.ext_of(grid)
         return tuple(l + 2 * w for l, w in zip(self.local_shape, e))
 
@@ -202,7 +250,15 @@ class HaloSpec:
         """Every slab one exchange round at this depth actually moves (both
         directions; zero-filled axes excluded).  Slab shapes follow the
         axis-by-axis pad order of the lowering: axes below the exchanged
-        one are already halo-padded when its slab moves."""
+        one are already halo-padded when its slab moves.
+
+        On a ``reverse`` (transposed) spec each slab is the adjoint of the
+        corresponding forward one: its destination is the forward slab's
+        *source* region (the neighbor's edge cells whose values were read
+        through the halo), its source is the forward destination (my halo
+        region, now holding cotangents), the neighbor direction is
+        inverted, and ``accumulate`` is set — same width, same shape,
+        same bytes."""
         out = []
         for g in (grids if grids is not None else self.grids):
             e = self.ext_of(g)
@@ -224,10 +280,16 @@ class HaloSpec:
                         (self.local_shape[ax] if nb < 0
                          else -self.local_shape[ax]) if a == ax else 0
                         for a in range(self.ndim))
+                    if self.reverse:
+                        # adjoint slab: land on the forward source region,
+                        # pull from the forward destination, flip neighbor
+                        offset = tuple(o + s for o, s in zip(offset, src))
+                        src = tuple(-s for s in src)
+                        nb = -nb
                     out.append(HaloExchange(
                         grid=g, axis=ax, mesh_axis=self.grid_axes[ax],
                         neighbor=nb, width=w, size=size, offset=offset,
-                        source_offset=src))
+                        source_offset=src, accumulate=self.reverse))
         return tuple(out)
 
     def zero_widths(self, grid: str) -> Tuple[int, ...]:

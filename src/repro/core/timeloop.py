@@ -259,14 +259,23 @@ class TimeloopEngine:
         t0 = time.perf_counter()
         donate = (0,) if _donate_ok(self.differentiable) else ()
         if masked:
-            if self.backend.kind != "xla" or not self.batch:
+            if self.backend.kind not in ("xla", "distributed") \
+                    or not self.batch:
                 raise ValueError(
-                    "masked windows require a batched xla timeloop")
-            win = lowering.lower_jax_window_masked(
-                self.kernel, self.halos, self.interior, self.swap, kw)
-            # mask and limit are per-scenario; start is window-global
-            fn = jax.jit(jax.vmap(win, in_axes=(0, 0, 0, None, 0)),
-                         donate_argnums=donate)
+                    "masked windows require a batched xla or distributed "
+                    "timeloop")
+            if self.backend.kind == "distributed":
+                from . import distributed as _dist
+                fn = _dist.lower_distributed_window(
+                    self.kernel, self.interior, self.backend, self.mesh,
+                    self.swap, kw, batch=self.batch,
+                    differentiable=self.differentiable, masked=True)
+            else:
+                win = lowering.lower_jax_window_masked(
+                    self.kernel, self.halos, self.interior, self.swap, kw)
+                # mask and limit are per-scenario; start is window-global
+                fn = jax.jit(jax.vmap(win, in_axes=(0, 0, 0, None, 0)),
+                             donate_argnums=donate)
         elif self.backend.kind == "xla":
             win = lowering.lower_jax_window(
                 self.kernel, self.halos, self.interior, None, self.swap, kw)
@@ -322,7 +331,8 @@ class TimeloopEngine:
             from . import distributed as _dist
             fn = _dist.lower_distributed_window(
                 self.kernel, self.interior, self.backend, self.mesh,
-                self.swap, kw, batch=self.batch)
+                self.swap, kw, batch=self.batch,
+                differentiable=self.differentiable)
         self._add("comp", time.perf_counter() - t0)
         self._windows[(kw, masked)] = fn
         return fn
@@ -374,6 +384,29 @@ class TimeloopEngine:
             *,
             domain_mask: Optional[jnp.ndarray] = None,
             step_limits=None) -> Dict[str, jnp.ndarray]:
+        """Advance the grids ``steps`` applications and return the final
+        buffers.
+
+        Args:
+            arrays: grid name → halo-padded buffer (leading scenario axis
+                of ``self.batch`` when batched).  Not mutated.
+            scalars: scalar-param name → value; floats broadcast, ``(B,)``
+                arrays stay per-scenario under batching.
+            steps: total kernel applications (with the leapfrog swap
+                rotation between them).
+            fuse_steps: fusion-window size; ``None`` fuses the whole loop.
+                Clamped via ``window_for``.
+            between: optional host hook ``between(t, arrays) -> arrays``
+                invoked at every window boundary.
+            domain_mask: per-scenario boolean interior mask — ``False``
+                cells hold their values (serving: frozen regions).
+                Requires a batched xla or distributed engine.
+            step_limits: per-scenario step counts; scenario ``b`` stops
+                advancing after ``step_limits[b]`` applications.
+
+        Returns a NEW dict of final buffers (same keys/shapes as
+        ``arrays``); window programs are compiled once per (window, mask)
+        signature and cached on the engine."""
         fuse = self.window_for(steps, fuse_steps)
         arrays = dict(arrays)
         if self.batch:
@@ -393,10 +426,11 @@ class TimeloopEngine:
         masked = domain_mask is not None or step_limits is not None
         mask = limits = None
         if masked:
-            if not self.batch or self.backend.kind != "xla":
+            if not self.batch \
+                    or self.backend.kind not in ("xla", "distributed"):
                 raise ValueError(
-                    "domain_mask / step_limits require a batched xla "
-                    "timeloop (the serving path)")
+                    "domain_mask / step_limits require a batched xla or "
+                    "distributed timeloop (the serving path)")
             if domain_mask is None:
                 mask = jnp.ones((self.batch,) + self.interior, bool)
             else:
@@ -487,7 +521,8 @@ def run_resilient(engine: TimeloopEngine,
                   ckpt_every: int = 1,
                   max_failures: int = 3,
                   injector=None,
-                  watchdog=None) -> Dict[str, jnp.ndarray]:
+                  watchdog=None,
+                  loss: Optional[Callable] = None) -> Dict[str, jnp.ndarray]:
     """Fault-tolerant timeloop driver: checkpoint/restore of the leapfrog
     carry through ``train.checkpoint`` + ``train.fault_tolerance``.
 
@@ -503,8 +538,24 @@ def run_resilient(engine: TimeloopEngine,
     boundaries as ``engine.run`` (a window is never re-split), so source
     injection timing survives restarts too.  Works for every backend the
     engine supports, including the distributed fused window on a mesh.
+
+    ``loss`` (a pure scalar function of the final arrays) switches the
+    driver to a fault-tolerant *gradient* run: the forward sweep AND the
+    checkpointed backward sweep both advance one restartable unit at a
+    time and resume from the latest snapshot after a failure — see
+    ``adjoint.resilient_grad``.  Returns that function's result dict
+    (``value`` / ``grad_arrays`` / ``grad_scalars``) instead of the final
+    arrays; requires ``TimeloopEngine(..., differentiable=True)``.
     """
     from repro.train import fault_tolerance as _ft
+
+    if loss is not None:
+        from . import adjoint as _adj
+        return _adj.resilient_grad(
+            engine, arrays, scalars, steps, loss, fuse_steps=fuse_steps,
+            between=between, ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+            max_failures=max_failures, injector=injector,
+            watchdog=watchdog)
 
     fuse = engine.window_for(steps, fuse_steps)
     n_windows = -(-steps // fuse) if steps > 0 else 0

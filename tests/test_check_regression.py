@@ -123,9 +123,14 @@ def test_gradient_throughput_guard():
     assert len(failures) == 1 and "grad_finite" in failures[0]
 
 
-def _dist_bench(speedup=1.6, bytes_w=16384, match=True, pruning=True):
+def _dist_bench(speedup=1.6, bytes_w=16384, match=True, pruning=True,
+                adj_match=True, fwd_over_grad=0.6, grad_finite=True):
     row = lambda n: {"modeled_collective_bytes_per_window": bytes_w * n,
                      "steps_per_s": 500.0 * n}
+    grad_row = lambda n: {"fwd_over_grad": fwd_over_grad,
+                          "grad_steps_per_s": 250.0 * n,
+                          "grad_finite": grad_finite,
+                          "sqrt_checkpoint_bound": True}
     return {
         "fused_vs_per_window": {"speedup": speedup,
                                 "fused_steps_per_s": 448.0},
@@ -137,6 +142,12 @@ def _dist_bench(speedup=1.6, bytes_w=16384, match=True, pruning=True):
             "best_in_top_k": True,
             "measured_at_most_top_k": True,
             "distributed_pruning_active": pruning,
+        },
+        "gradient_scaling": {
+            "throughput": {str(n): grad_row(n) for n in (1, 2, 4, 8)},
+            "adjoint_collective_model": {
+                c: {"match": adj_match, "modeled_adjoint_bytes": bytes_w}
+                for c in ("w4_d2", "w5_d2", "w6_d3")},
         },
     }
 
@@ -154,6 +165,33 @@ def test_distributed_guard_ratio_and_absolutes():
     assert all("collective_model" in f for f in failures)
     failures, _ = cr.check(_dist_bench(), _dist_bench(pruning=False))
     assert len(failures) == 1 and "distributed_pruning_active" in failures[0]
+
+
+def test_distributed_guard_adjoint():
+    """The distributed-adjoint rows: same-run fwd/grad ratio guarded like
+    a speedup, the backward HLO cross-check and finite-gradient flags
+    absolute, the modeled adjoint bytes exact."""
+    # cross-machine noise passes; a collapsed backward ratio fails
+    failures, _ = cr.check(_dist_bench(), _dist_bench(fwd_over_grad=0.55))
+    assert failures == []
+    failures, _ = cr.check(_dist_bench(), _dist_bench(fwd_over_grad=0.2))
+    assert len(failures) == 1 \
+        and "gradient_scaling.throughput.8.fwd_over_grad" in failures[0]
+    # the backward-program HLO cross-check is absolute (3 combos)
+    failures, _ = cr.check(_dist_bench(), _dist_bench(adj_match=False),
+                           threshold=10.0)
+    assert len(failures) == 3
+    assert all("adjoint_collective_model" in f for f in failures)
+    # a non-finite gradient on any sub-mesh size fails
+    failures, _ = cr.check(_dist_bench(), _dist_bench(grad_finite=False))
+    assert len(failures) == 4
+    assert all("grad_finite" in f for f in failures)
+    # modeled adjoint bytes are exact: a one-byte drift fails
+    fresh = _dist_bench()
+    fresh["gradient_scaling"]["adjoint_collective_model"]["w5_d2"][
+        "modeled_adjoint_bytes"] += 1
+    failures, _ = cr.check(_dist_bench(), fresh)
+    assert len(failures) == 1 and "w5_d2" in failures[0]
 
 
 def test_distributed_guard_exact_modeled_bytes():

@@ -192,3 +192,52 @@ def test_window_collective_bytes_prices_the_schedule():
     assert spec.window_collective_bytes(5, item) == expect
     # batch scales every slab linearly
     assert spec.window_collective_bytes(5, item, batch=3) == 3 * expect
+
+
+# ---- adjoint geometry: HaloSpec.transpose ----------------------------------
+def test_transpose_is_involution_flipping_reverse():
+    spec = _spec(depth=2)
+    t = spec.transpose()
+    assert t.reverse and not spec.reverse
+    assert t.transpose() == spec
+    # only the direction flag differs — same pads, shapes, depth
+    assert t.local_shape == spec.local_shape
+    assert t.depth == spec.depth
+    for g in ("u", "v", "c"):
+        assert t.ext_of(g) == spec.ext_of(g)
+
+
+def test_transpose_preserves_collective_bytes():
+    # the adjoint exchange moves the SAME slabs the opposite way, so the
+    # modeled traffic of a backward window equals the forward window's
+    spec = _spec(depth=2)
+    t = spec.transpose()
+    assert t.exchange_bytes(4) == spec.exchange_bytes(4)
+    for w in (1, 4, 5, 10):
+        assert (t.window_collective_bytes(w, 4)
+                == spec.window_collective_bytes(w, 4))
+
+
+def test_transpose_reverses_slab_geometry():
+    spec = _spec(depth=2)
+    fwd = {e.neighbor: e for e in spec.exchanges(["v"])}
+    adj = {e.neighbor: e for e in spec.transpose().exchanges(["v"])}
+    assert set(fwd) == set(adj) == {-1, +1}
+    for nb in (-1, +1):
+        # cotangent slabs flow the other way: the adjoint exchange toward
+        # neighbor nb lands on the forward exchange-from-nb's source strip
+        # and pulls from its destination strip, accumulating (+=) there
+        f, a = fwd[-nb], adj[nb]
+        assert a.accumulate and not f.accumulate
+        assert a.size == f.size
+
+        def dest_area(e):
+            return tuple((o, o + s) for o, s in zip(e.offset, e.size))
+
+        assert dest_area(a) == f.source_area()
+        assert a.source_area() == dest_area(f)
+
+
+def test_with_depth_preserves_reverse():
+    t = _spec(depth=3).transpose()
+    assert t.with_depth(1).reverse

@@ -1,0 +1,165 @@
+"""Documentation gate for the public engine surface.
+
+Three subcommands, each exiting non-zero on failure so CI can gate on them:
+
+    python tools/check_docs.py docstrings   # public API must be documented
+    python tools/check_docs.py links        # intra-repo markdown links resolve
+    python tools/check_docs.py doctest      # docstring examples actually run
+    python tools/check_docs.py all
+
+``docstrings`` imports the public engine modules (``repro.core.dsl``,
+``timeloop``, ``adjoint``, ``autotune``, ``halo``) and walks their public
+surface: module-level functions/classes (``__all__`` when defined, else
+non-underscore names defined in the module) plus public methods and
+properties of those classes.  Anything missing a docstring fails the check
+with its qualified name.
+
+``links`` scans every tracked ``*.md`` file for ``[text](target)`` links and
+verifies relative targets exist on disk (http/https/mailto and pure
+``#anchor`` links are skipped; a ``path#anchor`` target checks only the
+path).
+
+``doctest`` runs ``doctest.testmod`` over the same engine modules, so the
+usage examples embedded in docstrings are executable claims, not comments.
+
+Run from the repo root with ``PYTHONPATH=src``.
+"""
+from __future__ import annotations
+
+import argparse
+import doctest
+import importlib
+import inspect
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+PUBLIC_MODULES = (
+    "repro.core.dsl",
+    "repro.core.timeloop",
+    "repro.core.adjoint",
+    "repro.core.autotune",
+    "repro.core.halo",
+)
+
+# Dataclass-generated or inherited plumbing that needs no prose of its own.
+SKIP_MEMBERS = {"__init__"}
+
+
+def _public_toplevel(mod):
+    names = getattr(mod, "__all__", None)
+    if names is None:
+        names = [n for n in vars(mod) if not n.startswith("_")]
+    out = []
+    for name in names:
+        obj = getattr(mod, name, None)
+        if obj is None or inspect.ismodule(obj):
+            continue
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        # skip re-exports: only things defined in (or re-exported by a
+        # module that claims them via __all__) count
+        if getattr(obj, "__module__", None) != mod.__name__ \
+                and getattr(mod, "__all__", None) is None:
+            continue
+        out.append((name, obj))
+    return out
+
+
+def _missing_in_class(cls, qual):
+    missing = []
+    for name, member in vars(cls).items():
+        if name.startswith("_") or name in SKIP_MEMBERS:
+            continue
+        if isinstance(member, property):
+            if not (member.fget and member.fget.__doc__):
+                missing.append(f"{qual}.{name} (property)")
+        elif inspect.isfunction(member):
+            if not member.__doc__:
+                missing.append(f"{qual}.{name}()")
+        elif inspect.isclass(member):
+            if not member.__doc__:
+                missing.append(f"{qual}.{name}")
+    return missing
+
+
+def check_docstrings() -> int:
+    missing = []
+    for modname in PUBLIC_MODULES:
+        mod = importlib.import_module(modname)
+        if not mod.__doc__:
+            missing.append(modname)
+        for name, obj in _public_toplevel(mod):
+            qual = f"{modname}.{name}"
+            if not obj.__doc__:
+                missing.append(qual)
+            if inspect.isclass(obj) and obj.__module__ == mod.__name__:
+                missing.extend(_missing_in_class(obj, qual))
+    if missing:
+        print("public API entries missing docstrings:")
+        for m in sorted(set(missing)):
+            print(f"  {m}")
+        return 1
+    print(f"docstrings: OK ({len(PUBLIC_MODULES)} modules)")
+    return 0
+
+
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_FENCE = re.compile(r"```.*?```", re.S)
+
+
+def check_links() -> int:
+    bad = []
+    md_files = [p for p in REPO.rglob("*.md")
+                if ".git" not in p.parts and ".pytest_cache" not in p.parts]
+    n_links = 0
+    for md in md_files:
+        text = _CODE_FENCE.sub("", md.read_text())
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            n_links += 1
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                bad.append(f"{md.relative_to(REPO)}: broken link -> {target}")
+    if bad:
+        print("broken markdown links:")
+        for b in bad:
+            print(f"  {b}")
+        return 1
+    print(f"links: OK ({n_links} intra-repo links in {len(md_files)} files)")
+    return 0
+
+
+def check_doctests() -> int:
+    failures = attempted = 0
+    for modname in PUBLIC_MODULES:
+        mod = importlib.import_module(modname)
+        res = doctest.testmod(mod, verbose=False)
+        failures += res.failed
+        attempted += res.attempted
+    if failures:
+        print(f"doctest: {failures} failure(s) of {attempted}")
+        return 1
+    print(f"doctest: OK ({attempted} examples)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("check", choices=("docstrings", "links", "doctest", "all"))
+    ns = ap.parse_args(argv)
+    checks = {"docstrings": [check_docstrings], "links": [check_links],
+              "doctest": [check_doctests],
+              "all": [check_docstrings, check_links, check_doctests]}
+    return max(c() for c in checks[ns.check])
+
+
+if __name__ == "__main__":
+    sys.exit(main())
